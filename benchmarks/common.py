@@ -1,0 +1,44 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kwargs) -> Tuple[float, object]:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def toy_config(name: str = "toy-2m"):
+    from repro.configs.registry import get_config
+    return dataclasses.replace(get_config(name), dtype="float32")
+
+
+class CsvOut:
+    """Collects ``name,us_per_call,derived`` rows."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, seconds: float, derived: str = "") -> None:
+        self.rows.append((name, seconds * 1e6, derived))
+        print(f"{name},{seconds * 1e6:.2f},{derived}", flush=True)
+
+    def header(self) -> None:
+        print("name,us_per_call,derived", flush=True)

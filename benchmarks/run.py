@@ -1,0 +1,56 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+  fig1    -> bench_prox_time     (prox logprob computation time)
+  table1  -> bench_training      (end-to-end training: time + reward,
+                                  figs 2-6 statistics)
+  roofline-> bench_roofline      (dry-run derived roofline per arch x mesh)
+  kernels -> bench_kernels       (hot-spot microbenches)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import CsvOut
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   choices=["fig1", "table1", "roofline", "kernels"])
+    p.add_argument("--steps", type=int, default=30,
+                   help="RL steps for the training bench")
+    args = p.parse_args()
+
+    csv = CsvOut()
+    csv.header()
+    failures = []
+
+    def section(name, fn):
+        if args.only and args.only != name:
+            return
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            import traceback
+            traceback.print_exc()
+
+    from benchmarks import (bench_kernels, bench_prox_time, bench_roofline,
+                            bench_training)
+    section("fig1", lambda: bench_prox_time.run(csv))
+    section("kernels", lambda: bench_kernels.run(csv))
+    section("roofline", lambda: bench_roofline.run(csv))
+    section("table1", lambda: bench_training.run(csv, num_steps=args.steps))
+
+    if failures:
+        print(f"# FAILED sections: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

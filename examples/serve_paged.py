@@ -1,0 +1,54 @@
+"""Continuous-batching serving over the paged KV cache (vLLM-style).
+
+Requests of different lengths stream through a fixed number of slots;
+pages are recycled as sequences finish. Compare with examples/serve_batch.py
+(static batching, dense cache).
+
+Run: PYTHONPATH=src python examples/serve_paged.py [--requests 12]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.data import tokenizer as tok
+from repro.data.tasks import ArithmeticTask
+from repro.models import model as M
+from repro.rollout.continuous import ContinuousBatchingEngine
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--requests", type=int, default=12)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-new", type=int, default=8)
+    args = p.parse_args()
+
+    cfg = dataclasses.replace(get_config("toy-2m"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = ContinuousBatchingEngine(cfg, max_seqs=args.slots, block_size=8,
+                                   n_blocks=128, max_blocks_per_seq=8,
+                                   greedy=True)
+    task = ArithmeticTask(max_operand=99, n_terms=2, prompt_len=12, seed=3)
+    batch = task.sample(args.requests)
+    for i in range(args.requests):
+        L = int(batch.prompt_lengths[i])
+        srv.submit(batch.prompts[i, :L], max_new=args.max_new)
+
+    t0 = time.perf_counter()
+    done = srv.run(params, jax.random.PRNGKey(1))
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in done)
+    print(f"{len(done)} requests through {args.slots} slots: "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+    for r in done[:4]:
+        print(f"  req{r.rid}: {tok.decode(r.prompt)!r} -> "
+              f"{tok.decode(r.generated)!r}")
+    print(f"free pages after drain: {srv.allocator.n_free}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.async_rl.buffer import RolloutQueue  # noqa: F401
+from repro.async_rl.orchestrator import (  # noqa: F401
+    AsyncOrchestrator,
+    StepRecord,
+    simulate_async,
+)
+from repro.async_rl.weights import WeightStore  # noqa: F401

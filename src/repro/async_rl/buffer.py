@@ -1,0 +1,47 @@
+"""Bounded rollout queue with staleness filtering (AReaL-style gate)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import List, Optional
+
+from repro.rollout.engine import RolloutBatch
+
+
+class RolloutQueue:
+    """Thread-safe FIFO of rollout batches with a bounded-staleness gate.
+
+    ``pop_fresh`` drops batches whose behavior version is more than
+    ``max_staleness`` behind — the same data-discard policy AReaL applies to
+    keep off-policyness bounded.
+    """
+
+    def __init__(self, capacity: int = 16, max_staleness: int = 4):
+        self._q: "queue.Queue[RolloutBatch]" = queue.Queue(maxsize=capacity)
+        self.max_staleness = max_staleness
+        self.dropped = 0
+        self._lock = threading.Lock()
+
+    def push(self, batch: RolloutBatch, timeout: Optional[float] = None
+             ) -> bool:
+        try:
+            self._q.put(batch, timeout=timeout)
+            return True
+        except queue.Full:
+            return False
+
+    def pop_fresh(self, current_version: int, n: int = 1,
+                  timeout: float = 30.0) -> List[RolloutBatch]:
+        """Blocking pop of ``n`` sufficiently-fresh batches."""
+        out: List[RolloutBatch] = []
+        while len(out) < n:
+            batch = self._q.get(timeout=timeout)
+            if current_version - batch.version > self.max_staleness:
+                with self._lock:
+                    self.dropped += 1
+                continue
+            out.append(batch)
+        return out
+
+    def qsize(self) -> int:
+        return self._q.qsize()

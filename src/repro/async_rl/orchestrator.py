@@ -1,0 +1,176 @@
+"""Async RL orchestration: decoupled rollout + training engines.
+
+Two operating modes:
+
+* ``AsyncOrchestrator`` — real threads: a rollout worker continuously pulls
+  the latest weights, generates groups, and pushes version-stamped batches;
+  the trainer consumes fresh batches and publishes new weights. This is the
+  AReaL architecture in miniature (on one host the engines time-share the
+  device; on the production mesh they own disjoint pod slices).
+
+* ``simulate_async`` — deterministic single-thread simulation with an
+  explicit staleness schedule. Used by tests and by the sync-vs-async
+  benchmarks (reproducible, schedule-model timing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.async_rl.buffer import RolloutQueue
+from repro.async_rl.weights import WeightStore
+from repro.data.tasks import ArithmeticTask
+from repro.rollout.engine import RolloutEngine
+from repro.training.trainer import (
+    TrainState,
+    Trainer,
+    assemble_train_batch,
+)
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    reward: float
+    loss: float
+    entropy: float
+    iw_max: float
+    iw_min: float
+    clipped_tokens: float
+    staleness_mean: float
+    prox_time_s: float
+    rollout_time_s: float
+    train_time_s: float
+    wall_time_s: float
+    eval_reward: Optional[float] = None  # held-out eval (when scheduled)
+
+
+def _rollout_once(engine: RolloutEngine, task: ArithmeticTask,
+                  params, version: int, n_prompts: int, group: int, key):
+    batch = task.sample(n_prompts)
+    prompts = np.repeat(batch.prompts, group, axis=0)
+    lengths = np.repeat(batch.prompt_lengths, group)
+    answers = [a for a in batch.answers for _ in range(group)]
+    rb = engine.generate(params, prompts, lengths, key, version=version)
+    completions = engine.completions(rb)
+    rewards = task.rewards(completions, answers)
+    return rb, rewards
+
+
+class AsyncOrchestrator:
+    """Thread-decoupled rollout/training loop."""
+
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
+                 method: str = "loglinear", n_prompts: int = 16,
+                 max_new_tokens: int = 8, queue_capacity: int = 4,
+                 seed: int = 0):
+        self.cfg, self.rl, self.task, self.method = cfg, rl, task, method
+        self.n_prompts = n_prompts
+        self.engine = RolloutEngine(cfg, rl, max_new_tokens)
+        self.trainer = Trainer(cfg, rl, method)
+        self.queue = RolloutQueue(queue_capacity, rl.max_staleness)
+        self.seed = seed
+        self._stop = threading.Event()
+        self._rollout_times: List[float] = []
+
+    def _rollout_worker(self, store: WeightStore):
+        key = jax.random.PRNGKey(self.seed + 1)
+        while not self._stop.is_set():
+            params, version = store.latest()
+            key, sub = jax.random.split(key)
+            t0 = time.perf_counter()
+            rb, rewards = _rollout_once(
+                self.engine, self.task, params, version, self.n_prompts,
+                self.rl.group_size, sub)
+            self._rollout_times.append(time.perf_counter() - t0)
+            rb.rewards = rewards  # piggyback
+            if not self.queue.push(rb, timeout=1.0):
+                continue  # queue full — back-pressure
+
+    def run(self, state: TrainState, num_steps: int
+            ) -> (TrainState, List[StepRecord]):
+        store = WeightStore(state.params, int(state.version))
+        worker = threading.Thread(target=self._rollout_worker,
+                                  args=(store,), daemon=True)
+        t_start = time.perf_counter()
+        worker.start()
+        records: List[StepRecord] = []
+        try:
+            for step in range(num_steps):
+                batches = self.queue.pop_fresh(int(state.version), n=1)
+                rewards = np.concatenate([b.rewards for b in batches])
+                tb = assemble_train_batch(batches, rewards)
+                t0 = time.perf_counter()
+                state, m = self.trainer.step(state, tb)
+                train_t = time.perf_counter() - t0
+                store.publish(state.params, int(state.version))
+                records.append(StepRecord(
+                    step=step, reward=m["reward_mean"], loss=m["loss"],
+                    entropy=m.get("entropy", 0.0), iw_max=m["iw_max"],
+                    iw_min=m["iw_min"], clipped_tokens=m["clipped_tokens"],
+                    staleness_mean=m["staleness_mean"],
+                    prox_time_s=m["prox_time_s"],
+                    rollout_time_s=(np.mean(self._rollout_times[-3:])
+                                    if self._rollout_times else 0.0),
+                    train_time_s=train_t,
+                    wall_time_s=time.perf_counter() - t_start))
+        finally:
+            self._stop.set()
+            worker.join(timeout=10.0)
+        return state, records
+
+
+def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
+                   method: str, num_steps: int, *,
+                   n_prompts: int = 8, max_new_tokens: int = 8,
+                   staleness: int = 1, seed: int = 0,
+                   init_state: Optional[TrainState] = None,
+                   record_hook: Optional[Callable[[int, Dict], None]] = None,
+                   eval_every: int = 0,
+                   eval_fn: Optional[Callable] = None,
+                   ) -> (TrainState, List[StepRecord]):
+    """Deterministic async simulation: behavior policy lags ``staleness``
+    versions behind (0 == synchronous on-policy). ``eval_fn(params)`` is
+    invoked every ``eval_every`` steps (the paper's held-out eval worker,
+    Fig. 3); results land in ``StepRecord.eval_reward``."""
+    engine = RolloutEngine(cfg, rl, max_new_tokens)
+    trainer = Trainer(cfg, rl, method)
+    key = jax.random.PRNGKey(seed)
+    state = init_state or trainer.init_state(jax.random.PRNGKey(seed + 7))
+    history: deque = deque(maxlen=staleness + 1)
+    history.append((state.params, int(state.version)))
+    records: List[StepRecord] = []
+    t_start = time.perf_counter()
+    for step in range(num_steps):
+        behav_params, behav_version = history[0]
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        rb, rewards = _rollout_once(engine, task, behav_params,
+                                    behav_version, n_prompts,
+                                    rl.group_size, sub)
+        rollout_t = time.perf_counter() - t0
+        tb = assemble_train_batch([rb], rewards)
+        t0 = time.perf_counter()
+        state, m = trainer.step(state, tb)
+        train_t = time.perf_counter() - t0
+        history.append((state.params, int(state.version)))
+        rec = StepRecord(
+            step=step, reward=m["reward_mean"], loss=m["loss"],
+            entropy=m.get("entropy", 0.0), iw_max=m["iw_max"],
+            iw_min=m["iw_min"], clipped_tokens=m["clipped_tokens"],
+            staleness_mean=m["staleness_mean"], prox_time_s=m["prox_time_s"],
+            rollout_time_s=rollout_t, train_time_s=train_t,
+            wall_time_s=time.perf_counter() - t_start)
+        if eval_fn and eval_every and (step + 1) % eval_every == 0:
+            rec.eval_reward = float(eval_fn(state.params))
+        records.append(rec)
+        if record_hook:
+            record_hook(step, m)
+    return state, records

@@ -1,0 +1,32 @@
+"""Versioned weight store — the trainer->rollout weight-sync channel.
+
+In AReaL this is an NCCL broadcast between GPU pools; here it is a lock-
+protected (version, params) cell. On a real multi-pod TPU deployment the
+publish is a ``jax.device_put`` onto the rollout pod slice's mesh (see
+launch/train.py).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional, Tuple
+
+
+class WeightStore:
+    def __init__(self, params: Any, version: int = 0):
+        self._lock = threading.Lock()
+        self._params = params
+        self._version = version
+
+    def publish(self, params: Any, version: int) -> None:
+        with self._lock:
+            self._params = params
+            self._version = version
+
+    def latest(self) -> Tuple[Any, int]:
+        with self._lock:
+            return self._params, self._version
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version

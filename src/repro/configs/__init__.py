@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RLConfig,
+    SHAPES,
+    SSMConfig,
+    reduced,
+)

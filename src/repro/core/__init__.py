@@ -1,0 +1,14 @@
+from repro.core.a3po import (  # noqa: F401
+    alpha_from_staleness,
+    compute_prox_logp_approximation,
+    staleness,
+)
+from repro.core.advantages import (  # noqa: F401
+    broadcast_over_tokens,
+    group_normalized_advantages,
+)
+from repro.core.losses import (  # noqa: F401
+    coupled_ppo_loss,
+    decoupled_ppo_loss,
+    policy_loss,
+)

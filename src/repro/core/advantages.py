@@ -1,0 +1,26 @@
+"""Advantage estimation: group reward normalization (GRPO-style, §4.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def group_normalized_advantages(rewards: jax.Array, group_size: int,
+                                eps: float = 1e-6) -> jax.Array:
+    """rewards [B] with B = n_prompts * group_size (grouped contiguously).
+
+    A_i = (r_i - mean_group) / (std_group + eps); broadcast per-token by the
+    caller. This is the paper's 'group reward normalization'.
+    """
+    B = rewards.shape[0]
+    assert B % group_size == 0, (B, group_size)
+    g = rewards.reshape(B // group_size, group_size).astype(jnp.float32)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    adv = (g - mean) / (std + eps)
+    return adv.reshape(B)
+
+
+def broadcast_over_tokens(adv: jax.Array, mask: jax.Array) -> jax.Array:
+    """[B] sequence advantages -> [B, T] token advantages (masked)."""
+    return adv[:, None] * mask.astype(jnp.float32)

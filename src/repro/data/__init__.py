@@ -1,0 +1,2 @@
+from repro.data.tasks import ArithmeticTask, TaskBatch  # noqa: F401
+from repro.data import tokenizer  # noqa: F401

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingEnv,
+    constrain,
+    current_env,
+    use_sharding,
+)

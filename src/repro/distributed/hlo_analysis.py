@@ -1,0 +1,80 @@
+"""HLO parsing for the roofline: collective bytes + op census.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the (SPMD-partitioned, per-device) HLO text and sum
+the output-shape bytes of every collective op. ``*-start`` async forms are
+counted once (their ``*-done`` pair is skipped).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-reduce.5 = bf16[128,1024]{1,0} all-reduce(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:\w+\[[\d,]*\](?:\{[^}]*\})?(?:,\s*)?)+)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shapes_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Tuple[int, Dict[str, Dict[str, int]]]:
+    """Returns (total_bytes, {op: {count, bytes}}) from per-device HLO."""
+    per_op: Dict[str, Dict[str, int]] = {
+        op: {"count": 0, "bytes": 0} for op in COLLECTIVES}
+    total = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shapes_str)
+        per_op[op]["count"] += 1
+        per_op[op]["bytes"] += b
+        total += b
+    return total, {k: v for k, v in per_op.items() if v["count"]}
+
+
+# ------------------------------------------------------------------ roofline
+# TPU v5e hardware constants (per system prompt)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s per chip
+HBM_BW = 819e9                 # B/s per chip
+ICI_BW = 50e9                  # B/s per link
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float) -> Dict[str, float]:
+    """Three roofline terms in seconds (per device / chip)."""
+    compute = flops_per_device / PEAK_FLOPS_BF16
+    memory = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant  # type: ignore[assignment]
+    return terms

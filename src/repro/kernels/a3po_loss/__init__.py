@@ -1,0 +1,2 @@
+from repro.kernels.a3po_loss.ops import a3po_loss_fused  # noqa: F401
+from repro.kernels.a3po_loss.ref import a3po_loss_ref  # noqa: F401

@@ -1,0 +1,27 @@
+"""Dispatch wrapper for the fused A-3PO loss."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.a3po_loss.kernel import a3po_loss_pallas
+from repro.kernels.a3po_loss.ref import a3po_loss_ref
+
+
+def a3po_loss_fused(logp: jax.Array, behav_logp: jax.Array,
+                    alpha: jax.Array, adv: jax.Array, mask: jax.Array, *,
+                    clip_eps: float = 0.2, iw_cap: float = 5.0,
+                    interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    lead = logp.shape
+    flat = lambda x: x.reshape(-1)  # noqa: E731
+    if jax.default_backend() == "tpu" or interpret:
+        loss, clip = a3po_loss_pallas(
+            flat(logp), flat(behav_logp), flat(alpha), flat(adv), flat(mask),
+            clip_eps=clip_eps, iw_cap=iw_cap,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        loss, clip = a3po_loss_ref(
+            flat(logp), flat(behav_logp), flat(alpha), flat(adv), flat(mask),
+            clip_eps=clip_eps, iw_cap=iw_cap)
+    return loss.reshape(lead), clip.reshape(lead)

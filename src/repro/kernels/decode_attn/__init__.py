@@ -1,0 +1,4 @@
+from repro.kernels.decode_attn.kernel import (  # noqa: F401
+    decode_attention_pallas,
+)
+from repro.kernels.decode_attn.ops import decode_attention_op  # noqa: F401

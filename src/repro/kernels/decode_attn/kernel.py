@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: single-token (decode) flash attention over a KV cache.
+
+The serving hot spot: one query row per sequence against a [L, KV, hd]
+cache. GPU implementations (PagedAttention) split work across warps per
+sequence; the TPU adaptation streams key blocks of the cache through VMEM
+along the innermost grid axis with an online-softmax accumulator per
+(sequence, head), masking by the per-sequence length. GQA is handled in
+the k/v index_map (head h reads kv-head h // G).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m_ref, l_ref, *,
+            bk: int, n_k: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)           # [1, hd]
+    k = k_ref[...].astype(jnp.float32)           # [bk, hd]
+    v = v_ref[...].astype(jnp.float32)           # [bk, hd]
+    n_valid = len_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)[0] * scale  # [bk]
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    s = jnp.where(kpos < n_valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[0] = l_prev * corr + jnp.sum(p)
+    acc[...] = acc[...] * corr + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _done():
+        o_ref[...] = (acc[...] / jnp.maximum(l_ref[0], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, lengths: jax.Array, *,
+                            bk: int = 256, interpret: bool = True
+                            ) -> jax.Array:
+    """q [B,H,hd]; k/v_cache [B,L,KV,hd]; lengths [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bk = min(bk, L)
+    assert L % bk == 0, "cache length must be a block multiple"
+    n_k = L // bk
+    # layout: [B, KV, L, hd] so the key block is contiguous per head
+    kc = jnp.swapaxes(k_cache, 1, 2)
+    vc = jnp.swapaxes(v_cache, 1, 2)
+    kernel = functools.partial(_kernel, bk=bk, n_k=n_k, scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_k),
+        in_specs=[
+            pl.BlockSpec((None, None, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, bk, hd),
+                         lambda b, h, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((None, None, bk, hd),
+                         lambda b, h, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, 1, hd),
+                               lambda b, h, j: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(q[:, :, None, :], kc, vc, lengths)[:, :, 0, :]

@@ -1,0 +1,21 @@
+"""Dispatch wrapper for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attention_pallas
+from repro.models.attention import decode_attention as _ref
+
+
+def decode_attention_op(q: jax.Array, k_cache: jax.Array,
+                        v_cache: jax.Array, lengths: jax.Array, *,
+                        interpret: bool = False) -> jax.Array:
+    """q [B,H,hd]; caches [B,L,KV,hd]; lengths [B] valid-token counts."""
+    if jax.default_backend() == "tpu" or interpret:
+        return decode_attention_pallas(
+            q, k_cache, v_cache, lengths,
+            interpret=jax.default_backend() != "tpu")
+    L = k_cache.shape[1]
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    return _ref(q, k_cache, v_cache, valid)

@@ -1,0 +1,2 @@
+"""Oracle for single-token decode attention (shared with models.attention)."""
+from repro.models.attention import decode_attention as decode_attention_ref  # noqa: F401

@@ -1,0 +1,18 @@
+"""Dispatch wrapper for flash attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: Optional[int] = None,
+                    interpret: bool = False) -> jax.Array:
+    if jax.default_backend() == "tpu" or interpret:
+        return flash_attention_pallas(
+            q, k, v, window=window, interpret=jax.default_backend() != "tpu")
+    return flash_attention_ref(q, k, v, window=window)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for causal (windowed) flash attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, window: Optional[int] = None) -> jax.Array:
+    """q [B,H,S,hd], k/v [B,KV,S,hd] (GQA) -> [B,H,S,hd]."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    i = jnp.arange(S)
+    mask = i[:, None] >= i[None, :]
+    if window is not None:
+        mask &= (i[:, None] - i[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.logprob.ops import token_logprob_entropy  # noqa: F401
+from repro.kernels.logprob.ref import token_logprob_entropy_ref  # noqa: F401

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused token logprob + entropy over a blocked vocab.
+
+This is the hot spot the paper's "recompute" baseline pays for: scoring
+every token against a (up to 256k-entry) vocabulary. The kernel streams
+the logits through VMEM with an online max/logsumexp/moment accumulator so
+the [T, V] logit matrix never exists in HBM, and the d_model contraction is
+itself blocked so every working tile fits VMEM and feeds the MXU with
+128-aligned shapes.
+
+Grid: (T/bt, V/bv, D/bd) with D innermost (matmul accumulation), V middle
+(online softmax), T outer. Scratch persists across the (V, D) inner loops
+for a given T block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(hidden_ref, w_ref, targets_ref, logp_ref, ent_ref,
+            logits_acc, m_ref, l_ref, s_ref, tgt_ref, *, bv: int,
+            n_v: int, n_d: int, vocab: int):
+    j = pl.program_id(1)  # vocab block
+    k = pl.program_id(2)  # d_model block
+
+    # ---- matmul accumulation over d blocks
+    @pl.when(k == 0)
+    def _init_logits():
+        logits_acc[...] = jnp.zeros_like(logits_acc)
+
+    logits_acc[...] += jnp.dot(
+        hidden_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    # ---- after the last d block: online softmax update for this v block
+    @pl.when(k == n_d - 1)
+    def _online_update():
+        logits = logits_acc[...]  # [bt, bv] f32
+        # mask vocab padding (when vocab % bv != 0 the tail block over-reads)
+        v_idx = j * bv + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        valid = v_idx < vocab
+        logits = jnp.where(valid, logits, NEG_INF)
+
+        @pl.when(j == 0)
+        def _init_stats():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            s_ref[...] = jnp.zeros_like(s_ref)
+            tgt_ref[...] = jnp.zeros_like(tgt_ref)
+
+        m_prev, l_prev, s_prev = m_ref[...], l_ref[...], s_ref[...]
+        m_blk = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        corr = jnp.exp(m_prev - m_new)
+        p_blk = jnp.exp(logits - m_new[:, None])
+        p_blk = jnp.where(valid, p_blk, 0.0)
+        l_new = l_prev * corr + jnp.sum(p_blk, axis=1)
+        # entropy first moment: sum p_shifted * logits
+        s_new = s_prev * corr + jnp.sum(
+            p_blk * jnp.where(valid, logits, 0.0), axis=1)
+        m_ref[...], l_ref[...], s_ref[...] = m_new, l_new, s_new
+
+        # gather the target logit if it lives in this vocab block
+        tgt = targets_ref[...]  # [bt]
+        local = tgt - j * bv
+        in_blk = (local >= 0) & (local < bv)
+        one_hot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+                   == jnp.clip(local, 0, bv - 1)[:, None])
+        tgt_logit = jnp.sum(jnp.where(one_hot, logits, 0.0), axis=1)
+        tgt_ref[...] += jnp.where(in_blk, tgt_logit, 0.0)
+
+        @pl.when(j == n_v - 1)
+        def _finalize():
+            logz = m_ref[...] + jnp.log(l_ref[...])
+            logp_ref[...] = tgt_ref[...] - logz
+            ent_ref[...] = logz - s_ref[...] / l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bv", "bd", "interpret"))
+def token_logprob_entropy_pallas(
+    hidden: jax.Array,  # [T, d]
+    w: jax.Array,       # [d, V]
+    targets: jax.Array,  # [T] int32
+    *, bt: int = 256, bv: int = 512, bd: int = 512,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    T, d = hidden.shape
+    V = w.shape[1]
+    bt = min(bt, T)
+    bv = min(bv, V)
+    bd = min(bd, d)
+    n_t = pl.cdiv(T, bt)
+    n_v = pl.cdiv(V, bv)
+    n_d = pl.cdiv(d, bd)
+    # pad to exact block multiples (zero pads are correct for the d
+    # contraction; padded vocab columns are masked inside the kernel and
+    # padded token rows are sliced off below)
+    Tp, dp, Vp = n_t * bt, n_d * bd, n_v * bv
+    hidden = jnp.pad(hidden, ((0, Tp - T), (0, dp - d)))
+    w = jnp.pad(w, ((0, dp - d), (0, Vp - V)))
+    targets = jnp.pad(targets, (0, Tp - T))
+
+    kernel = functools.partial(_kernel, bv=bv, n_v=n_v, n_d=n_d, vocab=V)
+    out_shape = (jax.ShapeDtypeStruct((Tp,), jnp.float32),
+                 jax.ShapeDtypeStruct((Tp,), jnp.float32))
+    logp, ent = pl.pallas_call(
+        kernel,
+        grid=(n_t, n_v, n_d),
+        in_specs=[
+            pl.BlockSpec((bt, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bv), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bt,), lambda i, j, k: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bt,), lambda i, j, k: (i,)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bt, bv), jnp.float32),  # logits accumulator
+            pltpu.VMEM((bt,), jnp.float32),     # running max
+            pltpu.VMEM((bt,), jnp.float32),     # running sum-exp
+            pltpu.VMEM((bt,), jnp.float32),     # running sum p*logit
+            pltpu.VMEM((bt,), jnp.float32),     # target logit
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(hidden, w, targets)
+    return logp[:T], ent[:T]

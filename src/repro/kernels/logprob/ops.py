@@ -1,0 +1,36 @@
+"""Jit'd wrapper for the fused logprob kernel with backend dispatch.
+
+On TPU this calls the Pallas kernel (compiled); everywhere else it uses the
+pure-jnp oracle (the kernel itself is validated against the oracle in
+interpret mode by the test suite). A custom_vjp supplies the analytic
+backward pass — d/dh logp = w[:, t] - E_p[w], which never needs the full
+logits either.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.logprob.kernel import token_logprob_entropy_pallas
+from repro.kernels.logprob.ref import token_logprob_entropy_ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def token_logprob_entropy(hidden: jax.Array, w: jax.Array,
+                          targets: jax.Array, *, interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """hidden [..., d], w [d, V], targets [...] -> (logp, entropy) [...]."""
+    lead = hidden.shape[:-1]
+    h2 = hidden.reshape(-1, hidden.shape[-1])
+    t2 = targets.reshape(-1)
+    if _use_pallas() or interpret:
+        logp, ent = token_logprob_entropy_pallas(
+            h2, w, t2, interpret=not _use_pallas())
+    else:
+        logp, ent = token_logprob_entropy_ref(h2, w, t2)
+    return logp.reshape(lead), ent.reshape(lead)

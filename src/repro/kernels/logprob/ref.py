@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused token-logprob + entropy kernel.
+
+Materializes the full [T, V] logits — fine as an oracle and for small-vocab
+CPU runs; the Pallas kernel streams vocab blocks through VMEM instead.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def token_logprob_entropy_ref(hidden: jax.Array, w: jax.Array,
+                              targets: jax.Array
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """hidden [T, d], w [d, V], targets [T] -> (logp [T], entropy [T]).
+
+    Upcast via astype (not preferred_element_type) so the backward
+    cotangent w.r.t. hidden is cast back to the model dtype — otherwise an
+    f32 residual-stream cotangent doubles every backward collective."""
+    logits = jnp.einsum("td,dv->tv", hidden.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    logp = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0] - logz
+    p = jax.nn.softmax(logits, axis=-1)
+    entropy = logz - jnp.sum(p * logits, axis=-1)
+    return logp, entropy

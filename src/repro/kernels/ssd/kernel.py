@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block.
+
+The GPU reference fuses the whole selective scan into one CUDA kernel built
+around warp-level prefix products. On TPU we exploit the state-space
+*duality* instead: within a chunk the recurrence is exactly a masked
+attention-like matmul (MXU work), and only the tiny inter-chunk recurrence
+remains sequential (left in jnp as a lax.scan over S/chunk steps).
+
+Per (batch, chunk, head) grid cell this kernel computes:
+  y_intra[i] = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) dt_j x_j
+  s_local    = sum_j exp(cum_last - cum_j) (dt_j x_j) B_j^T
+  cdec       = exp(cum_last)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, la_ref, b_ref, c_ref, y_ref, s_ref, cdec_ref, *,
+            chunk: int):
+    x = x_ref[...].astype(jnp.float32)     # [cs, hd]
+    la = la_ref[...].astype(jnp.float32)   # [cs]
+    b = b_ref[...].astype(jnp.float32)     # [cs, ds]
+    c = c_ref[...].astype(jnp.float32)     # [cs, ds]
+
+    cum = jnp.cumsum(la)                       # [cs]
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # [cs, cs]
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    m = cb * decay
+    y_ref[...] = jnp.dot(m, x, preferred_element_type=jnp.float32
+                         ).astype(y_ref.dtype)
+
+    decay_last = jnp.exp(cum[-1] - cum)        # [cs]
+    s_ref[...] = jnp.dot((x * decay_last[:, None]).T, b,
+                         preferred_element_type=jnp.float32
+                         ).astype(s_ref.dtype)  # [hd, ds]
+    cdec_ref[...] = jnp.exp(cum[-1:]).astype(cdec_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk_pallas(
+    xdt: jax.Array,   # [B, S, nh, hd]  (x pre-scaled by dt)
+    la: jax.Array,    # [B, S, nh]      (log decay per step)
+    b: jax.Array,     # [B, S, ds]
+    c: jax.Array,     # [B, S, ds]
+    *, chunk: int = 256, interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y_intra [B,S,nh,hd], s_local [B,nc,nh,hd,ds],
+    chunk_decay [B,nc,nh])."""
+    B, S, nh, hd = xdt.shape
+    ds = b.shape[-1]
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    # reshape chunks into a leading axis the grid can walk
+    x_c = xdt.reshape(B, nc, chunk, nh, hd)
+    la_c = la.reshape(B, nc, chunk, nh)
+    b_c = b.reshape(B, nc, chunk, ds)
+    c_c = c.reshape(B, nc, chunk, ds)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y, s_local, cdec = pl.pallas_call(
+        kernel,
+        grid=(B, nc, nh),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, None, hd),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((None, None, chunk, None),
+                         lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((None, None, chunk, ds),
+                         lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((None, None, chunk, ds),
+                         lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, None, chunk, None, hd),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((None, None, None, hd, ds),
+                         lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((None, None, 1), lambda bi, ci, hi: (bi, ci, hi)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, nc, chunk, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh, hd, ds), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x_c, la_c, b_c, c_c)
+    return y.reshape(B, S, nh, hd), s_local, cdec

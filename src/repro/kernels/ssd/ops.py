@@ -1,0 +1,54 @@
+"""SSD op: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+The combination computes the same y/final-state as the sequential oracle
+(``ref.ssd_sequential_ref``) but with all O(chunk^2) work as MXU matmuls.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_intra_chunk_pallas
+from repro.kernels.ssd.ref import ssd_sequential_ref
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+             b: jax.Array, c: jax.Array, *, chunk: int = 256,
+             initial_state=None, interpret: bool = False
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD using the Pallas kernel for the intra-chunk part."""
+    if not (jax.default_backend() == "tpu" or interpret):
+        return ssd_sequential_ref(x, dt, a_log, b, c, initial_state)
+
+    B, S, nh, hd = x.shape
+    ds = b.shape[-1]
+    la = dt * (-jnp.exp(a_log.astype(jnp.float32)))
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    y_intra, s_local, cdec = ssd_intra_chunk_pallas(
+        xdt, la, b, c, chunk=chunk,
+        interpret=jax.default_backend() != "tpu")
+    nc = s_local.shape[1]
+    cs = S // nc
+
+    if initial_state is None:
+        initial_state = jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    def step(state, inp):
+        s_loc, cd = inp
+        new = state * cd[..., None, None] + s_loc
+        return new, state
+
+    final, prev_states = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(cdec, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,nc,nh,hd,ds]
+
+    # inter-chunk contribution: exp(cum_i) * C_i . S_prev
+    cum = jnp.cumsum(la.reshape(B, nc, cs, nh), axis=2)
+    c_c = c.reshape(B, nc, cs, ds)
+    y_inter = jnp.einsum("bnis,bnhds->bnihd", c_c.astype(jnp.float32),
+                         prev_states) * jnp.exp(cum)[..., None]
+    y = y_intra + y_inter.reshape(B, S, nh, hd)
+    return y.astype(x.dtype), final

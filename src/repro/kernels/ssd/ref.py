@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel: a naive sequential
+recurrence (the mathematically-defining form of the SSM)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                       b: jax.Array, c: jax.Array,
+                       initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Step-by-step scan. x [B,S,nh,hd], dt [B,S,nh], b/c [B,S,ds]."""
+    B, S, nh, hd = x.shape
+    ds = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [nh]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * a)  # [B,nh]
+        upd = jnp.einsum("bh,bhd,bs->bhds", dt_t, x_t.astype(jnp.float32),
+                         b_t.astype(jnp.float32))
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bs,bhds->bhd", c_t.astype(jnp.float32), state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

@@ -1,0 +1,251 @@
+"""Jit-able production step functions + abstract input specs.
+
+These are the programs the dry-run lowers for every (arch x shape x mesh)
+combination and that ``launch/train.py`` / ``launch/serve.py`` execute:
+
+* ``train_step``   — full A-3PO RL update: score + decoupled loss + bwd + Adam
+* ``prefill_step`` — prompt ingestion, returns last-token logits + kv cache
+* ``decode_step``  — one token for every sequence against a full cache
+
+All steps take a single ``batch`` dict whose abstract structure comes from
+``input_specs`` (ShapeDtypeStructs — no allocation) so in_shardings line up
+1:1 with the spec tree.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, RLConfig
+from repro.core.losses import policy_loss
+from repro.distributed.sharding import ShardingEnv, current_env
+from repro.kernels.logprob import token_logprob_entropy
+from repro.models import model as M
+from repro.models.layers import logits_from_hidden, output_head_weight
+from repro.models.params import shardings_from_specs
+from repro.training.optimizer import adam_update
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    """Sliding-window policy at the long-context decode point.
+
+    SSM/hybrid state is O(1); MLA's latent cache is compact enough to keep
+    the full 500k context. Full-attention archs use the documented
+    sliding-window variant (DESIGN.md §4)."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return None
+    if cfg.mla is not None:
+        return None
+    return cfg.long_context_window
+
+
+# ----------------------------------------------------------------- factories
+def _hoisted_gather(params, cfg: ModelConfig):
+    """FSDP all-gather hoisting (§Perf lever): constrain a compute copy of
+    the weights to their non-FSDP sharding OUTSIDE the microbatch scan, so
+    the data-axis all-gather happens once per training step instead of per
+    microbatch x fwd/bwd/remat. Gradients transpose back through the
+    constraint as reduce-scatters onto the FSDP layout."""
+    env = current_env()
+    if env is None:
+        return params
+    gathered_env = ShardingEnv(env.mesh, rules=tuple(env.rules.items()),
+                               fsdp=False)
+    sh = shardings_from_specs(M.model_spec(cfg), gathered_env)
+    return jax.tree.map(jax.lax.with_sharding_constraint, params, sh)
+
+
+def make_train_step(cfg: ModelConfig, rl: RLConfig, method: str = "loglinear",
+                    current_version: int = 4, num_microbatches: int = 8,
+                    hoist_fsdp_gather: bool = False):
+    """Full RL training step over the global batch.
+
+    Gradient-accumulates over ``num_microbatches`` (lax.scan) — the paper
+    bounds minibatches at 10,240 tokens; accumulation keeps activation
+    memory at 1/num_microbatches of the global batch while the HLO stays
+    O(1) in microbatch count."""
+    F = cfg.frontend_tokens if cfg.frontend else 0
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        hidden, aux = M.forward_hidden(params, cfg, tokens[:, :-1],
+                                       embeds=batch.get("embeds"))
+        if F:
+            hidden = hidden[:, F:]  # loss only over text positions
+        w = output_head_weight(params["embedding"], cfg)
+        logp, entropy = token_logprob_entropy(hidden, w, tokens[:, 1:])
+        loss, metrics = policy_loss(
+            method, logp, batch["behav_logp"], batch["advantages"],
+            batch["mask"], rl, versions=batch["versions"],
+            current_version=current_version,
+            recomputed_prox_logp=batch["behav_logp"], entropy=entropy)
+        return loss + aux, metrics
+
+    def train_step(params, opt, batch):
+        B = batch["tokens"].shape[0]
+        nm = num_microbatches if B % num_microbatches == 0 else 1
+        compute_params = (_hoisted_gather(params, cfg)
+                          if hoist_fsdp_gather else params)
+        if nm == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(compute_params, batch)
+            entropy = metrics["entropy"]
+        else:
+            mb = {k: v.reshape((nm, B // nm) + v.shape[1:])
+                  for k, v in batch.items()}
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def accum(carry, micro):
+                g_acc, loss_acc, ent_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(compute_params, micro)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, loss_acc + loss,
+                        ent_acc + metrics["entropy"]), None
+
+            (grads, loss, entropy), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            loss, entropy = loss / nm, entropy / nm
+        params, opt, gnorm = adam_update(grads, opt, params, rl)
+        return params, opt, loss, entropy, gnorm
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: InputShape,
+                      num_microbatches: int = 1):
+    """Prefill the prompt batch; ``num_microbatches`` > 1 scans over batch
+    chunks (prefill chunking — §Perf lever: activation temp scales with
+    the live chunk while the produced KV cache is unchanged)."""
+    window = decode_window(cfg, shape)
+
+    def one(params, batch):
+        hidden, cache = M.prefill(params, cfg, batch["tokens"],
+                                  embeds=batch.get("embeds"), window=window)
+        logits = logits_from_hidden(params["embedding"], hidden[:, -1:],
+                                    cfg)[:, 0]
+        return logits, cache
+
+    if num_microbatches <= 1:
+        return one
+
+    def prefill_step(params, batch):
+        B = batch["tokens"].shape[0]
+        nm = num_microbatches if B % num_microbatches == 0 else 1
+        if nm == 1:
+            return one(params, batch)
+        mb = {k: v.reshape((nm, B // nm) + v.shape[1:])
+              for k, v in batch.items()}
+
+        def body(_, micro):
+            return None, one(params, micro)
+
+        _, (logits, caches) = jax.lax.scan(body, None, mb)
+        # un-chunk: [nm, B/nm, ...] -> [B, ...]; per-layer cache leaves are
+        # [nm, L, B/nm, ...] -> [L, B, ...]
+        logits = logits.reshape((B,) + logits.shape[2:])
+        caches = jax.tree.map(
+            lambda x: (jnp.moveaxis(x, 0, 1).reshape(
+                (x.shape[1], B) + x.shape[3:])
+                if x.ndim >= 3 else x.reshape((B,) + x.shape[2:])),
+            caches)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: InputShape):
+    window = decode_window(cfg, shape)
+
+    def decode_step(params, batch):
+        return M.decode_step(params, cfg, batch["cache"], batch["tokens"],
+                             window=window)
+
+    return decode_step
+
+
+def make_step(cfg: ModelConfig, shape: InputShape, rl: RLConfig,
+              method: str = "loglinear"):
+    if shape.kind == "train":
+        return make_train_step(cfg, rl, method)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape)
+    return make_decode_step(cfg, shape)
+
+
+# --------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                rl: Optional[RLConfig] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this workload."""
+    del rl
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    i32, f32 = jnp.int32, jnp.float32
+    F = cfg.frontend_tokens if cfg.frontend else 0
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        # total context = F frontend embeddings + (S - F) text tokens
+        Tt = S - F
+        specs["tokens"] = jax.ShapeDtypeStruct((B, Tt), i32)
+        specs["behav_logp"] = jax.ShapeDtypeStruct((B, Tt - 1), f32)
+        specs["advantages"] = jax.ShapeDtypeStruct((B, Tt - 1), f32)
+        specs["mask"] = jax.ShapeDtypeStruct((B, Tt - 1), f32)
+        specs["versions"] = jax.ShapeDtypeStruct((B,), i32)
+        if F:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, F, cfg.d_model),
+                                                   dtype)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S - F), i32)
+        if F:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, F, cfg.d_model),
+                                                   dtype)
+    elif shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((B,), i32)
+        window = decode_window(cfg, shape)
+        specs["cache"] = M.init_cache(cfg, B, S, abstract=True,
+                                      window=window)
+    else:
+        raise ValueError(shape.kind)
+    return specs
+
+
+def abstract_opt_state(params_abstract):
+    """Abstract Adam state matching ``training.optimizer.adam_init``."""
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "m": jax.tree.map(f32, params_abstract),
+        "v": jax.tree.map(f32, params_abstract),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_shardings(param_sh, env: ShardingEnv):
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "t": env.sharding((), ()),
+    }
+
+
+def batch_shardings(cfg: ModelConfig, shape: InputShape, env: ShardingEnv,
+                    specs: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for name, spec in specs.items():
+        if name == "cache":
+            out["cache"] = M.cache_shardings(cfg, env, spec)
+        elif name == "embeds":
+            out[name] = env.sharding(spec.shape, ("batch", None, "act_embed"))
+        elif spec.ndim == 1:
+            out[name] = env.sharding(spec.shape, ("batch",))
+        else:
+            logical = ("batch",) + (None,) * (spec.ndim - 1)
+            out[name] = env.sharding(spec.shape, logical)
+    return out

@@ -1,0 +1,80 @@
+"""Production training launcher.
+
+On a TPU slice this builds the production mesh, shards params/opt with the
+logical rules, and drives async A-3PO training with the rollout engine on a
+disjoint pod slice (weight publish = device_put across meshes). On CPU (this
+container) it runs the same code path on a local mesh at toy scale — the
+full-scale mesh program is exercised by ``dryrun.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch toy-2m --steps 20 \
+      --method loglinear [--mesh local|prod|prod-multipod]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import RLConfig
+from repro.configs.registry import get_config
+from repro.async_rl.orchestrator import simulate_async
+from repro.data.tasks import ArithmeticTask
+from repro.distributed.sharding import ShardingEnv, use_sharding
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.training.checkpoints import save_checkpoint
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="toy-2m")
+    p.add_argument("--method", default="loglinear",
+                   choices=["loglinear", "recompute", "sync"])
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--staleness", type=int, default=2)
+    p.add_argument("--mesh", default="local",
+                   choices=["local", "prod", "prod-multipod"])
+    p.add_argument("--checkpoint", default=None)
+    args = p.parse_args()
+
+    if args.mesh == "local":
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "prod-multipod")
+    env = ShardingEnv(mesh)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    print(f"mesh {dict(mesh.shape)} ({n_dev} devices), arch {args.arch}, "
+          f"method {args.method}")
+
+    cfg = get_config(args.arch)
+    if jax.default_backend() == "cpu":
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        if cfg.num_params() > 5e7:
+            raise SystemExit(
+                f"{args.arch} is full-scale ({cfg.num_params()/1e9:.0f}B "
+                "params): use launch.dryrun on this host, or a TPU slice "
+                "to actually train. Toy archs: toy-2m / toy-20m.")
+
+    rl = RLConfig(group_size=4, num_minibatches=2, learning_rate=2e-4,
+                  max_staleness=args.staleness + 1)
+    task = ArithmeticTask(max_operand=9, n_terms=2, prompt_len=8)
+
+    with mesh, use_sharding(env):
+        state, recs = simulate_async(
+            cfg, rl, task, args.method, args.steps, n_prompts=8,
+            max_new_tokens=6,
+            staleness=0 if args.method == "sync" else args.staleness)
+    for r in recs[:: max(1, len(recs) // 8)]:
+        print(f"  step {r.step:3d} reward {r.reward:.3f} loss {r.loss:+.4f} "
+              f"prox {r.prox_time_s*1e3:.2f}ms stale {r.staleness_mean:.1f}")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, {"params": state.params},
+                        {"arch": args.arch, "method": args.method,
+                         "steps": args.steps})
+        print("saved", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

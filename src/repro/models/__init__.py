@@ -1,0 +1,13 @@
+from repro.models.model import (  # noqa: F401
+    abstract_params,
+    cache_logical_axes,
+    cache_shardings,
+    decode_step,
+    forward_hidden,
+    forward_logits,
+    init_cache,
+    init_params,
+    model_spec,
+    param_shardings,
+    prefill,
+)

@@ -1,0 +1,99 @@
+"""Shared primitive layers: RMSNorm, RoPE, SwiGLU FFN, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+# ----------------------------------------------------------------------- norm
+def rmsnorm_spec(d: int):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [half]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ ffn
+def swiglu_spec(d: int, d_ff: int):
+    return {
+        "w_gate": ParamSpec((d, d_ff), ("embed", "ff")),
+        "w_up": ParamSpec((d, d_ff), ("embed", "ff")),
+        "w_down": ParamSpec((d_ff, d), ("ff", "embed")),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g) * u
+    # NOTE: leading dim must stay "batch" — P(None, ...) would FORCE batch
+    # replication (None = replicated, not "unspecified") and GSPMD would
+    # all-gather every activation across the data axis.
+    h = constrain(h, "batch", *((None,) * (h.ndim - 2)), "act_ff")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ------------------------------------------------------------------ embedding
+def embedding_spec(cfg: ModelConfig):
+    # std d^-0.5: tied logits h @ embed.T stay O(1); the input side is
+    # rescaled by sqrt(d) in embed_tokens (Gemma/Cohere convention).
+    spec = {"embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"),
+                               scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        spec["out_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"))
+    return spec
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        # scale tied embeddings so logits stay O(1) (Gemma/Cohere style)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def output_head_weight(params, cfg: ModelConfig) -> jax.Array:
+    """[d_model, vocab] matrix producing logits."""
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["out_head"]
+
+
+def logits_from_hidden(params, hidden: jax.Array, cfg: ModelConfig,
+                       w: Optional[jax.Array] = None) -> jax.Array:
+    w = output_head_weight(params, cfg) if w is None else w
+    logits = jnp.einsum("...d,dv->...v", hidden, w,
+                        preferred_element_type=jnp.float32)
+    return constrain(logits, "batch", *((None,) * (logits.ndim - 2)),
+                     "vocab")

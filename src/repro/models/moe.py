@@ -1,0 +1,259 @@
+"""Top-k MoE with capacity-based dispatch (+ shared experts).
+
+Two dispatch paths:
+
+* ``moe_apply_gspmd`` — sort/scatter into a dense [E, C, d] buffer and let
+  GSPMD reshard. Simple and correct, but XLA implements the cross-shard
+  scatter as replicate+all-reduce of the WHOLE buffer (measured 21.6 TiB
+  of all-reduce per step for qwen3-moe train_4k — see EXPERIMENTS.md
+  §Perf).
+* ``moe_apply_ep`` — explicit expert-parallel shard_map: tokens are
+  seq-sharded over the "model" axis, routed pairs are bucketed by
+  destination rank and exchanged with ``jax.lax.all_to_all``, experts
+  compute locally, and a reverse all-to-all brings results home. This is
+  the production TPU MoE pattern; collective traffic drops to the
+  information-theoretic k-copies-of-tokens volume.
+
+``moe_apply`` picks EP when the active ShardingEnv requests it and the
+shapes allow (seq divisible by the model axis), else GSPMD.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.distributed.sharding import constrain, current_env
+from repro.models.layers import swiglu, swiglu_spec
+from repro.models.params import ParamSpec
+
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    d = cfg.d_model
+    spec: Dict[str, Any] = {
+        "router": ParamSpec((d, m.num_experts), ("embed", "experts")),
+        "w_gate": ParamSpec((m.num_experts, d, m.d_ff_expert),
+                            ("experts", "embed", "expert_ff")),
+        "w_up": ParamSpec((m.num_experts, d, m.d_ff_expert),
+                          ("experts", "embed", "expert_ff")),
+        "w_down": ParamSpec((m.num_experts, m.d_ff_expert, d),
+                            ("experts", "expert_ff", "embed")),
+    }
+    if m.num_shared_experts > 0:
+        spec["shared"] = swiglu_spec(d, m.num_shared_experts * m.d_ff_expert)
+    return spec
+
+
+def capacity(m: MoEConfig, num_tokens: int) -> int:
+    c = int(math.ceil(m.top_k * num_tokens / m.num_experts
+                      * m.capacity_factor))
+    return max(c, m.top_k)
+
+
+def route(router_w: jax.Array, x_flat: jax.Array, m: MoEConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (probs [T,E] f32, topk weights [T,k], topk idx [T,k])."""
+    logits = jnp.einsum("td,de->te", x_flat, router_w,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return probs, top_w, top_i
+
+
+def load_balance_loss(probs: jax.Array, top_i: jax.Array, m: MoEConfig
+                      ) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    counts = jnp.zeros((m.num_experts,), jnp.float32).at[
+        top_i.reshape(-1)].add(1.0)
+    f = counts / (T * m.top_k)
+    p = probs.mean(axis=0)
+    return m.num_experts * jnp.sum(f * p)
+
+
+def moe_apply(params, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss). Chooses EP shard_map vs GSPMD."""
+    env = current_env()
+    if (env is not None and getattr(env, "ep_shard_map", False)
+            and "model" in env.mesh.axis_names):
+        n_ranks = env.mesh.shape["model"]
+        if cfg.moe.num_experts % n_ranks == 0 and x.shape[1] >= n_ranks:
+            return moe_apply_ep(params, x, cfg, env)
+    return moe_apply_gspmd(params, x, cfg)
+
+
+def moe_apply_gspmd(params, x: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    probs, top_w, top_i = route(params["router"], xf, m)
+    aux = load_balance_loss(probs, top_i, m) * m.router_aux_weight
+
+    C = capacity(m, T)
+    E = m.num_experts
+    N = T * m.top_k
+    flat_e = top_i.reshape(N)
+    flat_w = top_w.reshape(N).astype(x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), m.top_k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos = jnp.arange(N) - starts[se]
+    slot = jnp.where(pos < C, se * C + pos, E * C)  # overflow -> trash row
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xf[st])
+    xe = buf[: E * C].reshape(E, C, d)
+    xe = constrain(xe, "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    h = constrain(h, "experts", None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    ye = constrain(ye, "experts", None, None)
+
+    padded = jnp.concatenate(
+        [ye.reshape(E * C, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+    y_pairs = padded[slot] * sw[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[st].add(y_pairs)
+
+    if m.num_shared_experts > 0:
+        y = y + swiglu(params["shared"], xf)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------- EP path
+def _bucket_by(ids: jax.Array, values: jax.Array, n_buckets: int,
+               cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort (ids, values) into [n_buckets, cap, ...] with overflow drop.
+
+    Returns (bucketed values, slot index per pair (== n_buckets*cap for
+    dropped), sort order) so callers can route auxiliary arrays the same
+    way and invert the permutation.
+    """
+    N = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sid = ids[order]
+    starts = jnp.searchsorted(sid, jnp.arange(n_buckets), side="left")
+    pos = jnp.arange(N) - starts[sid]
+    slot = jnp.where(pos < cap, sid * cap + pos, n_buckets * cap)
+    buf = jnp.zeros((n_buckets * cap + 1,) + values.shape[1:],
+                    values.dtype).at[slot].set(values[order])
+    return buf[:-1].reshape((n_buckets, cap) + values.shape[1:]), slot, order
+
+
+def _ep_body(x, router_w, w_gate, w_up, w_down, *, m: MoEConfig,
+             n_ranks: int, all_axes):
+    """Per-device expert-parallel MoE. x: [T_loc, d] (unique local tokens);
+    w_*: this rank's expert slab [E/n_ranks, ...]."""
+    T, d = x.shape
+    e_per = m.num_experts // n_ranks
+    k = m.top_k
+
+    probs, top_w, top_i = route(router_w, x, m)
+    aux = load_balance_loss(probs, top_i, m) * m.router_aux_weight
+    aux = jax.lax.pmean(aux, all_axes)
+
+    N = T * k
+    flat_e = top_i.reshape(N)
+    flat_w = top_w.reshape(N).astype(x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    dest = flat_e // e_per
+
+    # first-level bucket: destination rank, with the local-expert id (+1,
+    # 0 marks padding) riding along in an int payload
+    cap_send = max(int(math.ceil(N / n_ranks * m.capacity_factor)), k)
+    send_x, slot, order = _bucket_by(dest, x[flat_t], n_ranks, cap_send)
+    eid = ((flat_e % e_per) + 1).astype(jnp.int32)  # 0 == invalid
+    send_e = jnp.zeros((n_ranks * cap_send + 1,), jnp.int32
+                       ).at[slot].set(eid[order])
+    send_e = send_e[:-1].reshape(n_ranks, cap_send)
+
+    recv_x = jax.lax.all_to_all(send_x, "model", 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(send_e, "model", 0, 0, tiled=False)
+
+    # second-level bucket: local expert (invalid slots -> trash bucket)
+    Rn = n_ranks * cap_send
+    rx = recv_x.reshape(Rn, d)
+    re = jnp.where(recv_e.reshape(Rn) > 0, recv_e.reshape(Rn) - 1, e_per)
+    C2 = max(int(math.ceil(Rn / e_per * m.capacity_factor)), 1)
+    xe_full, slot2, order2 = _bucket_by(re, rx, e_per + 1, C2)
+    xe = xe_full[:e_per]
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) \
+        * jnp.einsum("ecd,edf->ecf", xe, w_up)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)
+
+    # invert second-level bucketing back to the recv layout
+    padded2 = jnp.concatenate(
+        [ye.reshape(e_per * C2, d),
+         jnp.zeros(((e_per + 1) * C2 - e_per * C2 + 1, d), ye.dtype)],
+        axis=0)  # trash bucket and overflow row read zeros
+    y_sorted = padded2[jnp.minimum(slot2, e_per * C2)]
+    y_sorted = jnp.where((slot2 < e_per * C2)[:, None], y_sorted, 0.0)
+    inv2 = jnp.argsort(order2, stable=True)
+    ry = y_sorted[inv2].astype(x.dtype)  # [Rn, d], recv layout
+
+    # reverse exchange back to the source ranks
+    back = jax.lax.all_to_all(ry.reshape(n_ranks, cap_send, d),
+                              "model", 0, 0, tiled=False)
+    flat_back = jnp.concatenate(
+        [back.reshape(n_ranks * cap_send, d),
+         jnp.zeros((1, d), back.dtype)], axis=0)
+    y_pairs_sorted = flat_back[slot]  # dropped pairs hit the zero row
+    inv = jnp.argsort(order, stable=True)
+    y_pairs = y_pairs_sorted[inv] * flat_w[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[flat_t].add(y_pairs)
+    return y, aux
+
+
+def moe_apply_ep(params, x: jax.Array, cfg: ModelConfig, env
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map + all_to_all over 'model'."""
+    from jax.experimental.shard_map import shard_map
+
+    m = cfg.moe
+    B, S, d = x.shape
+    mesh = env.mesh
+    n_ranks = mesh.shape["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # pad seq to a model-axis multiple (pad tokens only waste a sliver of
+    # capacity; their outputs are sliced off below)
+    orig_S = S
+    S = -(-S // n_ranks) * n_ranks
+    if S != orig_S:
+        x = jnp.pad(x, ((0, 0), (0, S - orig_S), (0, 0)))
+
+    all_axes = batch_axes + ("model",)
+
+    def body(x_blk, router_w, w_gate, w_up, w_down):
+        T = x_blk.shape[0] * x_blk.shape[1]
+        y, aux = _ep_body(x_blk.reshape(T, d), router_w, w_gate, w_up,
+                          w_down, m=m, n_ranks=n_ranks, all_axes=all_axes)
+        return y.reshape(x_blk.shape), aux
+
+    x_spec = P(batch_axes if batch_axes else None, "model", None)
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(), P("model"), P("model"), P("model")),
+        out_specs=(x_spec, P()),
+        check_rep=False)
+    y, aux = mapped(x, params["router"], params["w_gate"], params["w_up"],
+                    params["w_down"])
+    if m.num_shared_experts > 0:
+        y = y + swiglu(params["shared"], x.reshape(B * S, d)
+                       ).reshape(B, S, d)
+    if S != orig_S:
+        y = y[:, :orig_S]
+    return y, aux

@@ -1,0 +1,222 @@
+"""Mamba2 (SSD) block: chunked matmul-form scan (TPU-native) + O(1) decode.
+
+The GPU reference implements SSD with a fused selective-scan CUDA kernel.
+On TPU we use the *state-space duality* chunked form instead: intra-chunk
+interactions are chunk x chunk matmuls (MXU-friendly), and only the short
+inter-chunk recurrence runs as a ``lax.scan`` over ``S / chunk_size`` steps.
+The per-chunk matmuls are also provided as a Pallas kernel
+(``repro.kernels.ssd``); this module is the pure-jnp system path and the
+kernel's oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+def ssm_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.num_heads(d)
+    conv_dim = din + 2 * s.d_state
+    return {
+        "in_proj": ParamSpec((d, 2 * din + 2 * s.d_state + nh),
+                             ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), ("conv", "ssm_inner"),
+                            scale=s.d_conv ** -0.5),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((nh,), ("ssm_heads",), init="a_log"),
+        "d_skip": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="dt_bias"),
+        "norm": ParamSpec((din,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, s: SSMConfig, d_model: int):
+    din = s.d_inner(d_model)
+    nh = s.num_heads(d_model)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * s.d_state], axis=-1)
+    del nh
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc [B,S,Cd]; w [K,Cd]."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    S = xbc.shape[1]
+    out = sum(pad[:, i:i + S, :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float) -> jax.Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b: jax.Array, c: jax.Array, chunk: int,
+                initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [B,S,nh,hd]  (already conv'd/silu'd, head-split)
+    dt: [B,S,nh]    (softplus'd)
+    b, c: [B,S,ds]  (single group)
+    Returns (y [B,S,nh,hd], final_state [B,nh,hd,ds]).
+    """
+    B, S, nh, hd = x.shape
+    ds = b.shape[-1]
+    if S % chunk != 0:
+        chunk = S  # single chunk fallback (tiny test shapes)
+    nc = S // chunk
+
+    la = dt * (-jnp.exp(a_log.astype(jnp.float32)))  # [B,S,nh] log-decay
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    def r(t, tail):  # reshape into chunks
+        return t.reshape((B, nc, chunk) + tail)
+
+    la_c = r(la, (nh,))
+    x_c = r(xdt, (nh, hd))
+    b_c = r(b, (ds,))
+    c_c = r(c, (ds,))
+    cum = jnp.cumsum(la_c, axis=2)  # [B,nc,cs,nh]
+
+    # intra-chunk: Y[i] = sum_{j<=i} C_i.B_j * exp(cum_i - cum_j) * xdt_j
+    cb = jnp.einsum("bnis,bnjs->bnij", c_c, b_c,
+                    preferred_element_type=jnp.float32)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,i,j,nh]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    m = cb[..., None] * decay  # [B,nc,i,j,nh]
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", m.astype(x.dtype), x_c,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # per-chunk local end-state: S_n = sum_j exp(cum_last - cum_j) xdt_j b_j^T
+    decay_last = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,cs,nh]
+    s_local = jnp.einsum("bnjh,bnjhd,bnjs->bnhds",
+                         decay_last.astype(x.dtype), x_c, b_c,
+                         preferred_element_type=jnp.float32)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,nh]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    def step(state, inp):
+        s_loc, cdec = inp  # [B,nh,hd,ds], [B,nh]
+        prev = state
+        new = prev * cdec[..., None, None] + s_loc
+        return new, prev  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, initial_state.astype(jnp.float32),
+        (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,nc,nh,hd,ds]
+
+    # inter-chunk: Y[i] += exp(cum_i) * C_i . S_prev
+    y_inter = jnp.einsum("bnis,bnhds->bnihd", c_c,
+                         prev_states.astype(c_c.dtype),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = y_intra + y_inter.astype(x.dtype)
+    return y.reshape(B, S, nh, hd), final_state
+
+
+def ssm_full(params, x: jax.Array, cfg: ModelConfig,
+             initial_cache: Dict[str, Any] = None, pad_mask=None
+             ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full-sequence Mamba2 block. x: [B,S,d] -> (y, final cache)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    din, nh, hd = s.d_inner(d), s.num_heads(d), s.head_dim
+    B, S, _ = x.shape
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    zxbcdt = constrain(zxbcdt, "batch", None, "ssm_inner")
+    z, xbc_raw, dt = _split_proj(zxbcdt, s, d)
+
+    init_state = None
+    if initial_cache is not None:
+        # prepend cached conv inputs for causal continuity
+        xbc_raw = jnp.concatenate([initial_cache["conv"], xbc_raw], axis=1)
+        init_state = initial_cache["state"]
+        xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+        xbc = xbc[:, s.d_conv - 1:]
+    else:
+        xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs, b, c = jnp.split(xbc, [din, din + s.d_state], axis=-1)
+    xh = xs.reshape(B, S, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if pad_mask is not None:
+        # padded steps must not advance the state: dt=0 => a=1, input gain=0.
+        # (NOTE: ragged right-padding still leaves pad inputs in the conv
+        # tail cache; the rollout engine uses uniform prompt lengths.)
+        dt = dt * pad_mask[..., None].astype(dt.dtype)
+
+    y, state = ssd_chunked(xh, dt, params["a_log"], b, c, s.chunk_size,
+                           initial_state=init_state)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, din)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    conv_tail = (xbc_raw if initial_cache is None else xbc_raw)[
+        :, -(s.d_conv - 1):, :]
+    return out, {"conv": conv_tail, "state": state}
+
+
+def ssm_decode(params, x: jax.Array, cfg: ModelConfig,
+               cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token recurrent step. x: [B,d]; cache {conv [B,K-1,Cd], state}."""
+    s = cfg.ssm
+    d = cfg.d_model
+    din, nh, hd = s.d_inner(d), s.num_heads(d), s.head_dim
+    B = x.shape[0]
+
+    zxbcdt = jnp.einsum("bd,de->be", x, params["in_proj"])
+    z, xbc_t, dt = _split_proj(zxbcdt, s, d)
+
+    win = jnp.concatenate([cache["conv"], xbc_t[:, None]], axis=1)  # [B,K,Cd]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win, params["conv_w"]) + params["conv_b"])
+    xs, b, c = jnp.split(conv_out, [din, din + s.d_state], axis=-1)
+    xh = xs.reshape(B, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,nh]
+    a = jnp.exp(dt * (-jnp.exp(params["a_log"].astype(jnp.float32))))
+
+    state = cache["state"] * a[..., None, None] + jnp.einsum(
+        "bh,bhd,bs->bhds", dt, xh.astype(jnp.float32),
+        b.astype(jnp.float32))
+    y = jnp.einsum("bs,bhds->bhd", c, state.astype(c.dtype))
+    y = y.astype(x.dtype) + xh * params["d_skip"][None, :, None].astype(x.dtype)
+    y = _gated_norm(y.reshape(B, din), z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])
+    return out, {"conv": win[:, 1:], "state": state}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, *, abstract: bool = False,
+                   dtype=None) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    dtype = dtype or jnp.bfloat16
+    conv_shape = (batch, s.d_conv - 1, s.d_inner(d) + 2 * s.d_state)
+    state_shape = (batch, s.num_heads(d), s.head_dim, s.d_state)
+    if abstract:
+        return {"conv": jax.ShapeDtypeStruct(conv_shape, dtype),
+                "state": jax.ShapeDtypeStruct(state_shape, jnp.float32)}
+    return {"conv": jnp.zeros(conv_shape, dtype),
+            "state": jnp.zeros(state_shape, jnp.float32)}
+
+
+SSM_CACHE_LOGICAL = {"conv": ("batch", None, "ssm_inner"),
+                     "state": ("batch", "ssm_heads", None, None)}

@@ -1,0 +1,2 @@
+from repro.rollout.engine import RolloutBatch, RolloutEngine  # noqa: F401
+from repro.rollout.sampler import greedy_token, sample_token  # noqa: F401

@@ -1,0 +1,234 @@
+"""Continuous batching server over the paged KV cache.
+
+Requests are admitted into fixed slots as others finish (so the decode
+step compiles once for ``max_seqs``); finished sequences release their
+pages back to the allocator. This is the serving loop the paper's rollout
+engines (vLLM/SGLang) implement, in-framework.
+
+Supports dense GQA/MHA architectures (the paged pool holds per-layer K/V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.data import tokenizer as tok
+from repro.models import model as M
+from repro.models.attention import decode_attention
+from repro.models.layers import (
+    apply_rope,
+    embed_tokens,
+    logits_from_hidden,
+    rmsnorm,
+)
+from repro.models.layers import swiglu
+from repro.rollout import paged_cache as pc
+from repro.rollout.sampler import greedy_token, sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [P] token ids (unpadded)
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_decode_step(params, cfg: ModelConfig, pool_k, pool_v,
+                       block_tables, seq_lens, tokens):
+    """One token for every slot against the paged pool.
+
+    tokens: [S_max]; returns (logits [S_max, V], pool_k, pool_v).
+    """
+    bs = pool_k.shape[2]
+    n_slots, max_blocks = block_tables.shape
+    x = embed_tokens(params["embedding"], tokens[:, None], cfg)[:, 0]
+    lens = seq_lens
+    safe_tables = jnp.maximum(block_tables, 0)
+
+    blk_idx = lens // bs
+    offset = lens % bs
+    write_block = jnp.take_along_axis(safe_tables, blk_idx[:, None],
+                                      axis=1)[:, 0]
+
+    def layer(carry, xs):
+        x, pool_k, pool_v = carry
+        lp, li = xs
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        ap = lp["attn"]
+        q = jnp.einsum("bd,dhk->bhk", h, ap["wq"])
+        k = jnp.einsum("bd,dhk->bhk", h, ap["wk"])
+        v = jnp.einsum("bd,dhk->bhk", h, ap["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+        q = apply_rope(q[:, None], lens[:, None], cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], lens[:, None], cfg.rope_theta)[:, 0]
+
+        pool_k = pool_k.at[li, write_block, offset].set(
+            k.astype(pool_k.dtype))
+        pool_v = pool_v.at[li, write_block, offset].set(
+            v.astype(pool_v.dtype))
+
+        kv_k = pool_k[li][safe_tables].reshape(
+            n_slots, max_blocks * bs, *pool_k.shape[3:])
+        kv_v = pool_v[li][safe_tables].reshape(
+            n_slots, max_blocks * bs, *pool_v.shape[3:])
+        valid = jnp.arange(max_blocks * bs)[None, :] <= lens[:, None]
+        o = decode_attention(q, kv_k, kv_v, valid)
+        y = jnp.einsum("bhk,hkd->bd", o, ap["wo"])
+        if cfg.parallel_block:
+            f = swiglu(lp["ffn"], h)
+            x = x + y + f
+        else:
+            x = x + y
+            h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + swiglu(lp["ffn"], h2)
+        return (x, pool_k, pool_v), None
+
+    li = jnp.arange(len(cfg.block_kinds()), dtype=jnp.int32)
+    (x, pool_k, pool_v), _ = jax.lax.scan(
+        layer, (x, pool_k, pool_v), (params["blocks"], li))
+    x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)[:, 0]
+    logits = logits_from_hidden(params["embedding"], x, cfg)
+    return logits, pool_k, pool_v
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, cfg: ModelConfig, *, max_seqs: int = 8,
+                 block_size: int = 16, n_blocks: int = 256,
+                 max_blocks_per_seq: int = 16,
+                 rl: Optional[RLConfig] = None, greedy: bool = False):
+        assert cfg.arch_type in ("dense",), "paged serving: dense archs"
+        self.cfg = cfg
+        self.rl = rl or RLConfig()
+        self.greedy = greedy
+        self.max_seqs = max_seqs
+        # reserve the last block as the scratch target for idle slots
+        self.allocator = pc.BlockAllocator(n_blocks - 1)
+        self.trash_block = n_blocks - 1
+        self.state = pc.init_paged_cache(
+            cfg, n_blocks=n_blocks, block_size=block_size,
+            max_seqs=max_seqs, max_blocks_per_seq=max_blocks_per_seq,
+            dtype=jnp.dtype(cfg.dtype))
+        # idle slots write into the scratch block
+        bt = np.full((max_seqs, max_blocks_per_seq), -1, np.int32)
+        bt[:, 0] = self.trash_block
+        self.state = dataclasses.replace(
+            self.state, block_tables=jnp.asarray(bt))
+        self.slots: Dict[int, Optional[Request]] = {
+            i: None for i in range(max_seqs)}
+        self._pending: List[Request] = []
+        self._next_logits = jnp.zeros((max_seqs, cfg.vocab_size),
+                                      jnp.float32)
+        self._rid = 0
+
+    # ------------------------------------------------------------- requests
+    def submit(self, prompt_ids, max_new: int = 16) -> int:
+        self._rid += 1
+        self._pending.append(Request(self._rid, np.asarray(prompt_ids),
+                                     max_new))
+        return self._rid
+
+    def _admit(self, params) -> None:
+        for slot, req in self.slots.items():
+            if req is not None or not self._pending:
+                continue
+            nxt = self._pending[0]
+            blocks_needed = -(-(len(nxt.prompt) + nxt.max_new)
+                              // self.state.block_size)
+            if blocks_needed > self.allocator.n_free:
+                break
+            self._pending.pop(0)
+            self.slots[slot] = nxt
+            self._prefill_into(params, slot, nxt)
+
+    def _prefill_into(self, params, slot: int, req: Request) -> None:
+        P = len(req.prompt)
+        self.state = pc.map_sequence(self.state, self.allocator, slot,
+                                     P + req.max_new)
+        toks = jnp.asarray(req.prompt)[None, :]
+        hidden, cache = M.prefill(params, self.cfg, toks, max_len=P)
+        # copy dense prefill K/V into this sequence's pages
+        bs = self.state.block_size
+        table = np.asarray(self.state.block_tables[slot])
+        k = cache["attn"]["k"][:, 0]  # [L, P, KV, hd]
+        v = cache["attn"]["v"][:, 0]
+        pool_k, pool_v = self.state.pool_k, self.state.pool_v
+        for start in range(0, P, bs):
+            blk = int(table[start // bs])
+            n = min(bs, P - start)
+            pool_k = pool_k.at[:, blk, :n].set(k[:, start:start + n])
+            pool_v = pool_v.at[:, blk, :n].set(v[:, start:start + n])
+        self.state = dataclasses.replace(
+            self.state, pool_k=pool_k, pool_v=pool_v,
+            seq_lens=self.state.seq_lens.at[slot].set(P))
+        logits = logits_from_hidden(params["embedding"], hidden[:, -1],
+                                    self.cfg)
+        self._next_logits = self._next_logits.at[slot].set(logits[0])
+
+    # ----------------------------------------------------------------- step
+    def step(self, params, key) -> List[Request]:
+        """One decode step for every active slot; returns finished reqs."""
+        if self.greedy:
+            tokens, _ = greedy_token(self._next_logits)
+        else:
+            tokens, _ = sample_token(self._next_logits, key,
+                                     temperature=self.rl.temperature,
+                                     top_p=self.rl.top_p)
+        tokens = np.asarray(tokens)
+        active = [s for s, r in self.slots.items() if r is not None]
+        for slot in active:
+            self.state = pc.ensure_capacity(self.state, self.allocator,
+                                            slot)
+        logits, pool_k, pool_v = _paged_decode_step(
+            params, self.cfg, self.state.pool_k, self.state.pool_v,
+            self.state.block_tables, self.state.seq_lens,
+            jnp.asarray(tokens))
+        self._next_logits = logits
+        # bump active lens only
+        lens = self.state.seq_lens
+        for slot in active:
+            lens = lens.at[slot].add(1)
+        self.state = dataclasses.replace(self.state, pool_k=pool_k,
+                                         pool_v=pool_v, seq_lens=lens)
+        finished: List[Request] = []
+        for slot in active:
+            req = self.slots[slot]
+            t = int(tokens[slot])
+            req.generated.append(t)
+            if t == tok.EOS or len(req.generated) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                self.state = pc.release_sequence(self.state, self.allocator,
+                                                 slot)
+                # park the idle slot back on the scratch block
+                self.state = dataclasses.replace(
+                    self.state,
+                    block_tables=self.state.block_tables.at[slot, 0].set(
+                        self.trash_block))
+                self.slots[slot] = None
+        return finished
+
+    # ------------------------------------------------------------------ run
+    def run(self, params, key, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        while (self._pending or any(r is not None
+                                    for r in self.slots.values())):
+            self._admit(params)
+            if not any(r is not None for r in self.slots.values()):
+                break
+            key, sub = jax.random.split(key)
+            done.extend(self.step(params, sub))
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving loop exceeded max_steps")
+        return done

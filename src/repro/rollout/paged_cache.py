@@ -1,0 +1,173 @@
+"""Paged KV cache (vLLM-style) adapted to JAX/TPU.
+
+The paper's rollout engines (SGLang/vLLM) rely on paged attention for
+memory efficiency under continuous batching. GPU PagedAttention walks a
+block table with pointer indirection inside the kernel; the TPU-native
+adaptation keeps a *dense block pool* as one array and turns the block
+table into a gather index — XLA lowers the page gather + attention to
+contiguous DMA-friendly reads, and freed blocks are recycled by index
+bookkeeping on the host.
+
+Layout:
+  pool_k/pool_v : [n_layers, n_blocks, block_size, KV, hd]
+  block_tables  : [max_seqs, max_blocks_per_seq] int32 (-1 = unmapped)
+  seq_lens      : [max_seqs] int32
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class PagedCacheState:
+    pool_k: jax.Array
+    pool_v: jax.Array
+    block_tables: jax.Array  # [max_seqs, max_blocks]
+    seq_lens: jax.Array      # [max_seqs]
+
+    @property
+    def block_size(self) -> int:
+        return self.pool_k.shape[2]
+
+    @property
+    def max_blocks(self) -> int:
+        return self.block_tables.shape[1]
+
+
+class BlockAllocator:
+    """Host-side free-list over pool blocks (shared across layers)."""
+
+    def __init__(self, n_blocks: int):
+        self.free: List[int] = list(range(n_blocks - 1, -1, -1))
+
+    def alloc(self, n: int) -> List[int]:
+        if len(self.free) < n:
+            raise RuntimeError(f"paged cache OOM: need {n} blocks, "
+                               f"have {len(self.free)}")
+        return [self.free.pop() for _ in range(n)]
+
+    def release(self, blocks: List[int]) -> None:
+        self.free.extend(b for b in blocks if b >= 0)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+def init_paged_cache(cfg: ModelConfig, *, n_blocks: int, block_size: int,
+                     max_seqs: int, max_blocks_per_seq: int,
+                     dtype=None) -> PagedCacheState:
+    assert cfg.mla is None and not cfg.is_attention_free, \
+        "paged cache supports GQA/MHA attention stacks"
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_attn = sum(1 for k in cfg.block_kinds() if k == "attn")
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_attn, n_blocks, block_size, kv, hd)
+    return PagedCacheState(
+        pool_k=jnp.zeros(shape, dtype),
+        pool_v=jnp.zeros(shape, dtype),
+        block_tables=jnp.full((max_seqs, max_blocks_per_seq), -1, jnp.int32),
+        seq_lens=jnp.zeros((max_seqs,), jnp.int32),
+    )
+
+
+# ------------------------------------------------------------------ device ops
+def write_token(state: PagedCacheState, layer: int, k: jax.Array,
+                v: jax.Array, slot_ids: jax.Array) -> PagedCacheState:
+    """Write one token's K/V for active slots.
+
+    k, v: [B_active, KV, hd]; slot_ids: [B_active] rows of block_tables.
+    The target block/offset come from seq_lens (position = current len).
+    """
+    bs = state.block_size
+    lens = state.seq_lens[slot_ids]
+    block_idx = lens // bs
+    offset = lens % bs
+    blocks = state.block_tables[slot_ids, block_idx]  # [B_active]
+    blocks = jnp.maximum(blocks, 0)  # unmapped -> block 0 (caller ensures mapped)
+
+    pool_k = state.pool_k.at[layer, blocks, offset].set(
+        k.astype(state.pool_k.dtype))
+    pool_v = state.pool_v.at[layer, blocks, offset].set(
+        v.astype(state.pool_v.dtype))
+    return dataclasses.replace(state, pool_k=pool_k, pool_v=pool_v)
+
+
+def gather_kv(state: PagedCacheState, layer: int, slot_ids: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Materialize per-slot K/V views [B, max_blocks*bs, KV, hd] + validity.
+
+    This is the TPU adaptation of the paged-attention pointer walk: a
+    gather over the block pool (one XLA gather per layer), letting the
+    regular decode attention run on the result.
+    """
+    bs = state.block_size
+    tables = state.block_tables[slot_ids]            # [B, max_blocks]
+    safe = jnp.maximum(tables, 0)
+    k = state.pool_k[layer][safe]                    # [B, mb, bs, KV, hd]
+    v = state.pool_v[layer][safe]
+    B, mb = tables.shape
+    k = k.reshape(B, mb * bs, *k.shape[3:])
+    v = v.reshape(B, mb * bs, *v.shape[3:])
+    lens = state.seq_lens[slot_ids]
+    valid = jnp.arange(mb * bs)[None, :] < lens[:, None]
+    # tokens in unmapped blocks are never valid (len bound covers them)
+    return k, v, valid
+
+
+def bump_lens(state: PagedCacheState, slot_ids: jax.Array
+              ) -> PagedCacheState:
+    return dataclasses.replace(
+        state, seq_lens=state.seq_lens.at[slot_ids].add(1))
+
+
+# ------------------------------------------------------------------- host ops
+def map_sequence(state: PagedCacheState, allocator: BlockAllocator,
+                 slot: int, n_tokens: int) -> PagedCacheState:
+    """Allocate blocks for a new sequence of n_tokens (prefill) + growth."""
+    bs = state.block_size
+    n_needed = -(-n_tokens // bs)
+    blocks = allocator.alloc(n_needed)
+    table = np.asarray(state.block_tables[slot]).copy()
+    table[:] = -1
+    table[: n_needed] = blocks
+    return dataclasses.replace(
+        state,
+        block_tables=state.block_tables.at[slot].set(jnp.asarray(table)),
+        seq_lens=state.seq_lens.at[slot].set(0),
+    )
+
+
+def ensure_capacity(state: PagedCacheState, allocator: BlockAllocator,
+                    slot: int) -> PagedCacheState:
+    """Grow the sequence's table by one block if the next token needs it."""
+    bs = state.block_size
+    length = int(state.seq_lens[slot])
+    block_idx = length // bs
+    if block_idx >= state.max_blocks:
+        raise RuntimeError("sequence exceeded max_blocks_per_seq")
+    if int(state.block_tables[slot, block_idx]) < 0:
+        (blk,) = allocator.alloc(1)
+        state = dataclasses.replace(
+            state, block_tables=state.block_tables.at[slot, block_idx].set(
+                blk))
+    return state
+
+
+def release_sequence(state: PagedCacheState, allocator: BlockAllocator,
+                     slot: int) -> PagedCacheState:
+    table = [int(b) for b in np.asarray(state.block_tables[slot])]
+    allocator.release([b for b in table if b >= 0])
+    return dataclasses.replace(
+        state,
+        block_tables=state.block_tables.at[slot].set(
+            jnp.full((state.max_blocks,), -1, jnp.int32)),
+        seq_lens=state.seq_lens.at[slot].set(0),
+    )

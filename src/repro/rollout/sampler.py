@@ -1,0 +1,40 @@
+"""Token sampling: temperature + top-p, returning behavior log-probs.
+
+The behavior log-prob is recorded under the *tempered* distribution (the
+actual sampling policy). With the paper's settings (temperature=1.0,
+top_p=1.0) this equals the model distribution, matching what SGLang/vLLM
+report to AReaL.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jax.Array, key: jax.Array, *,
+                 temperature: float = 1.0, top_p: float = 1.0
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """logits [B, V] -> (token [B], behav_logp [B])."""
+    logits = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    logp_full = jax.nn.log_softmax(logits, axis=-1)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative mass >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
+                                     axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    token = jax.random.categorical(key, logits, axis=-1)
+    behav_logp = jnp.take_along_axis(logp_full, token[:, None], axis=-1)[:, 0]
+    return token, behav_logp
+
+
+def greedy_token(logits: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    logp_full = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    token = jnp.argmax(logits, axis=-1)
+    return token, jnp.take_along_axis(logp_full, token[:, None],
+                                      axis=-1)[:, 0]

@@ -1,0 +1,80 @@
+"""Dependency-free pytree checkpointing (npz + json metadata)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, path="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{path}/{k}" if path else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{path}/#{i}"))
+    else:
+        out[path] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if isinstance(node, dict):
+            if node and all(k.startswith("#") for k in node):
+                return [fix(node[f"#{i}"]) for i in range(len(node))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def save_checkpoint(path: str, tree: Any,
+                    metadata: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    with open(meta_path, "w") as f:
+        json.dump(metadata or {}, f, indent=2)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, Dict[str, Any]]:
+    npz = path if path.endswith(".npz") else path + ".npz"
+    with np.load(npz) as data:
+        flat = {k: data[k] for k in data.files}
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    meta = {}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return _unflatten(flat), meta
+
+
+def restore_sharded(path: str, shardings: Any) -> Tuple[Any, Dict[str, Any]]:
+    """Load a checkpoint and place every leaf on its mesh sharding.
+
+    ``shardings`` mirrors the saved tree (e.g. from
+    ``models.param_shardings``); leaves land directly on devices in their
+    distributed layout — the restore path a multi-host deployment uses
+    after the per-host files are assembled.
+    """
+    import jax
+
+    tree, meta = load_checkpoint(path)
+    placed = jax.tree.map(
+        lambda arr, sh: jax.device_put(jax.numpy.asarray(arr), sh),
+        tree, shardings)
+    return placed, meta

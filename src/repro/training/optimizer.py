@@ -1,0 +1,58 @@
+"""Adam(W) with global-norm clipping — fp32 states, hand-rolled in JAX."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RLConfig
+
+OptState = Dict[str, Any]
+
+
+def adam_init(params) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adam_update(grads, state: OptState, params, rl: RLConfig
+                ) -> Tuple[Any, OptState, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, rl.max_grad_norm / (gnorm + 1e-9))
+    t = state["t"] + 1
+    b1, b2, eps = rl.adam_b1, rl.adam_b2, rl.adam_eps
+    c1 = 1.0 - b1 ** t.astype(jnp.float32)
+    c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        step = rl.learning_rate * (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if rl.weight_decay:
+            step = step + rl.learning_rate * rl.weight_decay \
+                * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "t": t}, gnorm

@@ -1,0 +1,202 @@
+"""RL trainer: scoring, prox recompute, minibatched A-3PO/decoupled/coupled
+updates — the training engine of the async system.
+
+Matches the paper's procedure (§4.1): one *training step* consumes a rollout
+batch, optionally recomputes the proximal policy with an extra forward pass
+(method='recompute' — the cost A-3PO deletes), then performs
+``num_minibatches`` gradient updates with the frozen anchor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.core.advantages import group_normalized_advantages
+from repro.core.losses import policy_loss
+from repro.kernels.logprob import token_logprob_entropy
+from repro.models import model as M
+from repro.models.layers import output_head_weight
+from repro.rollout.engine import RolloutBatch
+from repro.training.optimizer import adam_init, adam_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    version: jax.Array  # int32 scalar — the target-policy version v(pi_theta)
+
+
+@dataclasses.dataclass
+class TrainBatch:
+    """Device-ready training batch assembled from rollouts."""
+
+    tokens: jax.Array        # [B, T]
+    response_mask: jax.Array  # [B, T-1] (1 on generated-token predictions)
+    behav_logp: jax.Array    # [B, T-1] (0 outside mask)
+    versions: jax.Array      # [B] behavior policy versions
+    rewards: jax.Array       # [B]
+
+
+def assemble_train_batch(rollouts: List[RolloutBatch],
+                         rewards: np.ndarray) -> TrainBatch:
+    """Scatter ragged generation logps into [B, T-1] aligned tensors."""
+    tokens = np.concatenate([r.tokens for r in rollouts], axis=0)
+    B, T = tokens.shape
+    behav = np.zeros((B, T - 1), np.float32)
+    mask = np.zeros((B, T - 1), np.float32)
+    versions = np.zeros((B,), np.int32)
+    row = 0
+    for r in rollouts:
+        N = r.gen_logp.shape[1]
+        for b in range(r.batch_size):
+            L = int(r.prompt_lengths[b])
+            # position t predicts tokens[t+1]; first generated token is
+            # predicted at t = L-1
+            behav[row, L - 1: L - 1 + N] = r.gen_logp[b]
+            mask[row, L - 1: L - 1 + N] = r.gen_mask[b]
+            versions[row] = r.version
+            row += 1
+    return TrainBatch(
+        tokens=jnp.asarray(tokens),
+        response_mask=jnp.asarray(mask),
+        behav_logp=jnp.asarray(behav),
+        versions=jnp.asarray(versions),
+        rewards=jnp.asarray(rewards, jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------- score
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def score_tokens(params, cfg: ModelConfig, tokens: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-position logp of tokens[t+1] + entropy. Returns ([B,T-1]x2, aux).
+
+    Uses the fused logprob kernel path — the [T, V] logits never
+    materialize (this is exactly the computation the 'recompute' baseline
+    pays for every training step).
+    """
+    hidden, aux = M.forward_hidden(params, cfg, tokens[:, :-1])
+    w = output_head_weight(params["embedding"], cfg)
+    logp, entropy = token_logprob_entropy(hidden, w, tokens[:, 1:])
+    return logp, entropy, aux
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def recompute_prox_logp(params, cfg: ModelConfig, tokens: jax.Array
+                        ) -> jax.Array:
+    """The explicit proximal forward pass of decoupled PPO (Hilton 2022).
+
+    This is the per-step cost A-3PO eliminates (paper Fig. 1)."""
+    logp, _, _ = score_tokens(params, cfg, tokens)
+    return jax.lax.stop_gradient(logp)
+
+
+# ---------------------------------------------------------------------- loss
+def _loss_fn(params, cfg: ModelConfig, rl: RLConfig, method: str,
+             tokens, behav_logp, advantages, mask, versions,
+             current_version, prox_logp):
+    logp, entropy, aux = score_tokens.__wrapped__(params, cfg, tokens)
+    loss, metrics = policy_loss(
+        method, logp, behav_logp, advantages, mask, rl,
+        versions=versions, current_version=current_version,
+        recomputed_prox_logp=prox_logp, entropy=entropy)
+    return loss + aux, metrics
+
+
+# NOTE: params are NOT donated — the async runtime keeps older versions
+# alive as behavior policies; only the optimizer state is safe to donate.
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "method"),
+                   donate_argnums=(4,))
+def minibatch_update(cfg: ModelConfig, rl: RLConfig, method: str,
+                     params, opt, current_version,
+                     tokens, behav_logp, advantages, mask, versions,
+                     prox_logp):
+    (loss, metrics), grads = jax.value_and_grad(
+        _loss_fn, has_aux=True)(params, cfg, rl, method, tokens, behav_logp,
+                                advantages, mask, versions, current_version,
+                                prox_logp)
+    params, opt, gnorm = adam_update(grads, opt, params, rl)
+    metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+    return params, opt, metrics
+
+
+# -------------------------------------------------------------------- driver
+class Trainer:
+    """One training engine. ``step`` = the paper's 'training step'."""
+
+    def __init__(self, cfg: ModelConfig, rl: Optional[RLConfig] = None,
+                 method: str = "loglinear"):
+        assert method in ("loglinear", "recompute", "sync")
+        self.cfg = cfg
+        self.rl = rl or RLConfig()
+        self.method = method
+
+    def init_state(self, key, dtype=None) -> TrainState:
+        params = M.init_params(self.cfg, key, dtype=dtype)
+        return TrainState(params, adam_init(params),
+                          jnp.zeros((), jnp.int32))
+
+    def step(self, state: TrainState, batch: TrainBatch
+             ) -> Tuple[TrainState, Dict[str, float]]:
+        rl = self.rl
+        adv_seq = group_normalized_advantages(batch.rewards, rl.group_size)
+        advantages = adv_seq[:, None] * batch.response_mask
+
+        # --- explicit prox forward pass (recompute baseline only)
+        t0 = time.perf_counter()
+        if self.method == "recompute":
+            prox = recompute_prox_logp(state.params, self.cfg, batch.tokens)
+            prox.block_until_ready()
+        else:
+            prox = jnp.zeros_like(batch.behav_logp)  # unused placeholder
+        prox_time = time.perf_counter() - t0
+
+        params, opt = state.params, state.opt
+        B = batch.tokens.shape[0]
+        nmb = min(rl.num_minibatches, B)
+        mb = B // nmb
+        all_metrics: List[Dict[str, jax.Array]] = []
+        for i in range(nmb):
+            sl = slice(i * mb, (i + 1) * mb)
+            params, opt, metrics = minibatch_update(
+                self.cfg, rl, self.method, params, opt, state.version,
+                batch.tokens[sl], batch.behav_logp[sl], advantages[sl],
+                batch.response_mask[sl], batch.versions[sl], prox[sl])
+            all_metrics.append(metrics)
+
+        out = {k: float(np.mean([float(m[k]) for m in all_metrics]))
+               for k in all_metrics[0]}
+        out["iw_max"] = float(np.max([float(m["iw_max"])
+                                      for m in all_metrics]))
+        out["iw_min"] = float(np.min([float(m["iw_min"])
+                                      for m in all_metrics]))
+        out["clipped_tokens"] = float(np.sum([float(m["clipped_tokens"])
+                                              for m in all_metrics]))
+        out["prox_time_s"] = prox_time
+        out["reward_mean"] = float(batch.rewards.mean())
+        out["staleness_mean"] = float(
+            (state.version - batch.versions).mean())
+        new_state = TrainState(params, opt, state.version + 1)
+        return new_state, out
+
+
+# ----------------------------------------------------------------- SFT warmup
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"), donate_argnums=(2,))
+def sft_update(cfg: ModelConfig, params, opt, tokens, mask, lr: float = 1e-3):
+    rl = RLConfig(learning_rate=lr, max_grad_norm=1.0)
+
+    def loss_fn(p):
+        logp, _, aux = score_tokens.__wrapped__(p, cfg, tokens)
+        ce = -jnp.sum(logp * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt, _ = adam_update(grads, opt, params, rl)
+    return params, opt, loss

@@ -1,0 +1,24 @@
+import dataclasses
+
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests run on the real single CPU device.
+# Only launch/dryrun.py forces the 512-device placeholder platform.
+
+from repro.configs.registry import get_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def f32(cfg):
+    """CPU tests run in float32 (bf16 is slow + noisy on host)."""
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def toy_cfg():
+    return f32(get_config("toy-2m"))

@@ -1,0 +1,191 @@
+"""Per-kernel correctness sweeps: Pallas (interpret=True) vs pure-jnp
+oracle across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.a3po_loss.kernel import a3po_loss_pallas
+from repro.kernels.a3po_loss.ref import a3po_loss_ref
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+from repro.kernels.logprob.kernel import token_logprob_entropy_pallas
+from repro.kernels.logprob.ref import token_logprob_entropy_ref
+from repro.kernels.ssd.kernel import ssd_intra_chunk_pallas
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import ssd_sequential_ref
+
+
+# ------------------------------------------------------------------ logprob
+@pytest.mark.parametrize("T,d,V", [
+    (16, 32, 50), (300, 130, 1000), (64, 512, 513), (7, 48, 22),
+    (128, 64, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_logprob_kernel_vs_ref(T, d, V, dtype):
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (T, d), dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (d, V), jnp.float32)
+         * 0.05).astype(dtype)
+    t = jax.random.randint(jax.random.PRNGKey(2), (T,), 0, V)
+    lp_k, en_k = token_logprob_entropy_pallas(h, w, t, bt=64, bv=128, bd=64,
+                                              interpret=True)
+    lp_r, en_r = token_logprob_entropy_ref(h, w, t)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(lp_k, lp_r, rtol=tol, atol=tol)
+    np.testing.assert_allclose(en_k, en_r, rtol=tol, atol=tol)
+
+
+def test_logprob_is_valid_distribution():
+    """exp(logp) must be <= 1 and entropy >= 0."""
+    key = jax.random.PRNGKey(3)
+    h = jax.random.normal(key, (32, 16), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (16, 97), jnp.float32)
+    t = jax.random.randint(jax.random.PRNGKey(5), (32,), 0, 97)
+    lp, en = token_logprob_entropy_pallas(h, w, t, interpret=True)
+    assert np.all(np.asarray(lp) <= 1e-5)
+    assert np.all(np.asarray(en) >= -1e-5)
+
+
+# --------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("B,H,KV,S,hd,window", [
+    (2, 4, 2, 64, 32, None),   # GQA
+    (1, 4, 4, 128, 16, None),  # MHA
+    (2, 2, 1, 64, 32, None),   # MQA
+    (2, 2, 1, 64, 32, 32),     # sliding window
+    (1, 8, 2, 96, 64, None),   # non-power-of-two seq (96 = 3*32)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(B, H, KV, S, hd, window, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, S, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, hd), dtype)
+    o_k = flash_attention_pallas(q, k, v, bq=32, bk=32, window=window,
+                                 interpret=True)
+    o_r = flash_attention_ref(q, k, v, window=window)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("B,S,nh,hd,ds,cs", [
+    (2, 64, 4, 16, 8, 16), (1, 48, 2, 8, 4, 16), (2, 32, 1, 4, 4, 32),
+    (1, 128, 2, 32, 16, 32)])
+def test_ssd_kernel_vs_sequential(B, S, nh, hd, ds, cs):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3),
+                                           (B, S, nh)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, nh))
+    b = jax.random.normal(jax.random.PRNGKey(4), (B, S, ds)) * 0.3
+    c = jax.random.normal(jax.random.PRNGKey(5), (B, S, ds)) * 0.3
+    y_k, f_k = ssd_scan(x, dt, a_log, b, c, chunk=cs, interpret=True)
+    y_r, f_r = ssd_sequential_ref(x, dt, a_log, b, c)
+    np.testing.assert_allclose(y_k, y_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(f_k, f_r, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_initial_state_continuity():
+    """Splitting a sequence at a chunk boundary and carrying the state must
+    equal one contiguous scan (the decode-handoff invariant)."""
+    key = jax.random.PRNGKey(0)
+    B, S, nh, hd, ds = 1, 64, 2, 8, 4
+    x = jax.random.normal(key, (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (B, S, nh)))
+    a_log = jnp.zeros((nh,))
+    b = jax.random.normal(jax.random.PRNGKey(2), (B, S, ds)) * 0.3
+    c = jax.random.normal(jax.random.PRNGKey(3), (B, S, ds)) * 0.3
+    y_full, f_full = ssd_sequential_ref(x, dt, a_log, b, c)
+    y1, f1 = ssd_sequential_ref(x[:, :32], dt[:, :32], a_log, b[:, :32],
+                                c[:, :32])
+    y2, f2 = ssd_sequential_ref(x[:, 32:], dt[:, 32:], a_log, b[:, 32:],
+                                c[:, 32:], initial_state=f1)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(f2, f_full, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_intra_chunk_outputs():
+    """Kernel intra-chunk output matches a one-chunk sequential scan."""
+    key = jax.random.PRNGKey(7)
+    B, S, nh, hd, ds = 1, 16, 2, 8, 4
+    x = jax.random.normal(key, (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(8),
+                                           (B, S, nh)))
+    a_log = jnp.log(jnp.array([1.0, 2.0]))
+    b = jax.random.normal(jax.random.PRNGKey(9), (B, S, ds)) * 0.3
+    c = jax.random.normal(jax.random.PRNGKey(10), (B, S, ds)) * 0.3
+    la = dt * (-jnp.exp(a_log))
+    xdt = x * dt[..., None]
+    y, s_local, cdec = ssd_intra_chunk_pallas(xdt, la, b, c, chunk=16,
+                                              interpret=True)
+    y_r, f_r = ssd_sequential_ref(x, dt, a_log, b, c)
+    np.testing.assert_allclose(y[:, :, 0], y_r[:, :, 0], rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(s_local[:, 0], f_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- a3po loss
+@pytest.mark.parametrize("T", [64, 1000, 4096])
+def test_a3po_loss_kernel_vs_ref(T):
+    key = jax.random.PRNGKey(0)
+    lp = -jax.random.uniform(key, (T,)) * 3
+    bl = -jax.random.uniform(jax.random.PRNGKey(6), (T,)) * 3
+    al = jax.random.uniform(jax.random.PRNGKey(7), (T,))
+    adv = jax.random.normal(jax.random.PRNGKey(8), (T,))
+    mask = (jax.random.uniform(jax.random.PRNGKey(9), (T,)) > 0.3
+            ).astype(jnp.float32)
+    l_k, c_k = a3po_loss_pallas(lp, bl, al, adv, mask, bt=128,
+                                interpret=True)
+    l_r, c_r = a3po_loss_ref(lp, bl, al, adv, mask, clip_eps=0.2, iw_cap=5.0)
+    np.testing.assert_allclose(l_k, l_r, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(c_k, c_r)
+
+
+def test_a3po_fused_matches_modular_loss():
+    """The fused kernel must agree with core.losses.decoupled_ppo_loss."""
+    from repro.configs.base import RLConfig
+    from repro.core.a3po import compute_prox_logp_approximation
+    from repro.core.losses import decoupled_ppo_loss
+
+    key = jax.random.PRNGKey(0)
+    B, T = 4, 32
+    cfg = RLConfig()
+    logp = -jax.random.uniform(key, (B, T)) * 3
+    behav = -jax.random.uniform(jax.random.PRNGKey(1), (B, T)) * 3
+    adv = jax.random.normal(jax.random.PRNGKey(2), (B, T))
+    mask = jnp.ones((B, T))
+    versions = jnp.array([0, 1, 2, 3])
+    prox = compute_prox_logp_approximation(behav, logp, versions, 3, cfg)
+    l_mod, m = decoupled_ppo_loss(logp, behav, prox, adv, mask, cfg)
+
+    from repro.core.a3po import alpha_from_staleness, staleness
+    alpha = jnp.broadcast_to(
+        alpha_from_staleness(staleness(versions, 3), cfg)[:, None], (B, T))
+    l_tok, clip_tok = a3po_loss_pallas(
+        logp.reshape(-1), behav.reshape(-1), alpha.reshape(-1),
+        adv.reshape(-1), mask.reshape(-1), clip_eps=cfg.clip_eps,
+        iw_cap=cfg.behav_weight_cap, interpret=True)
+    np.testing.assert_allclose(l_tok.sum() / mask.sum(), l_mod,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(clip_tok.sum(), m["clipped_tokens"])
+
+
+# --------------------------------------------------------------- decode attn
+@pytest.mark.parametrize("B,H,KV,L,hd,bk", [
+    (2, 4, 2, 64, 32, 32), (1, 8, 1, 128, 16, 64), (3, 4, 4, 96, 32, 32)])
+def test_decode_attention_kernel_vs_ref(B, H, KV, L, hd, bk):
+    from repro.kernels.decode_attn.kernel import decode_attention_pallas
+    from repro.models.attention import decode_attention as ref
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, L, KV, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, L, KV, hd))
+    lengths = jax.random.randint(jax.random.PRNGKey(3), (B,), 1, L + 1)
+    o_k = decode_attention_pallas(q, kc, vc, lengths, bk=bk, interpret=True)
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    o_r = ref(q, kc, vc, valid)
+    np.testing.assert_allclose(o_k, o_r, rtol=2e-4, atol=2e-4)
