@@ -1,0 +1,71 @@
+"""Radix prefix cache benchmark: GRPO-style grouped prompts.
+
+The serving win the control plane targets: ``group_size`` rollouts of the
+*same* prompt should prefill it once. Reports prefill tokens actually
+computed and end-to-end tokens/s with the cache off vs on, plus the
+prefill-token reduction factor (acceptance: >= 1.5x for n=8 identical
+prompts).
+
+Run: PYTHONPATH=src:. python -m benchmarks.bench_prefix_cache
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CsvOut, toy_config
+from repro.models import model as M
+from repro.rollout.continuous import ContinuousBatchingEngine
+from repro.serving.prefix_cache import RadixPrefixCache
+
+
+def _serve_group(cfg, params, prompt, *, group: int, max_new: int,
+                 cached: bool):
+    eng = ContinuousBatchingEngine(cfg, max_seqs=group, block_size=4,
+                                   n_blocks=256, max_blocks_per_seq=16,
+                                   greedy=True)
+    if cached:
+        eng.prefix_cache = RadixPrefixCache(eng.allocator,
+                                            eng.state.block_size)
+    for _ in range(group):
+        eng.submit(prompt, max_new=max_new)
+    t0 = time.perf_counter()
+    done = eng.run(params, jax.random.PRNGKey(1))
+    dt = time.perf_counter() - t0
+    prefill_computed = sum(len(r.prompt) - r.prefix_hit_tokens for r in done)
+    gen_tokens = sum(len(r.generated) for r in done)
+    return done, prefill_computed, gen_tokens, dt
+
+
+def run(csv: CsvOut, group: int = 8, prompt_len: int = 16,
+        max_new: int = 8) -> float:
+    cfg = toy_config()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(4, cfg.vocab_size, size=prompt_len).astype(np.int32)
+
+    results = {}
+    for cached in (False, True):
+        done, prefill, gen, dt = _serve_group(
+            cfg, params, prompt, group=group, max_new=max_new, cached=cached)
+        assert len(done) == group
+        label = "on" if cached else "off"
+        results[label] = (prefill, gen, dt)
+        csv.add(f"prefix_cache_{label}_n{group}", dt,
+                f"prefill_tokens={prefill};tok_s={gen / dt:.1f}")
+
+    # identical outputs with and without the cache is part of the contract
+    reduction = results["off"][0] / max(results["on"][0], 1)
+    csv.add(f"prefix_cache_reduction_n{group}", 0.0,
+            f"prefill_token_reduction={reduction:.2f}x")
+    return reduction
+
+
+if __name__ == "__main__":
+    csv = CsvOut()
+    csv.header()
+    r = run(csv)
+    print(f"# prefill-token reduction: {r:.2f}x (target >= 1.5x)")
+    assert r >= 1.5, f"prefix cache reduction {r:.2f}x below 1.5x target"

@@ -5,6 +5,8 @@
                                   figs 2-6 statistics)
   roofline-> bench_roofline      (dry-run derived roofline per arch x mesh)
   kernels -> bench_kernels       (hot-spot microbenches)
+  prefix  -> bench_prefix_cache  (radix prefix cache: shared prefills for
+                                  GRPO-style grouped prompts)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -19,7 +21,8 @@ from benchmarks.common import CsvOut
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
-                   choices=["fig1", "table1", "roofline", "kernels"])
+                   choices=["fig1", "table1", "roofline", "kernels",
+                            "prefix"])
     p.add_argument("--steps", type=int, default=30,
                    help="RL steps for the training bench")
     args = p.parse_args()
@@ -39,11 +42,12 @@ def main() -> None:
             import traceback
             traceback.print_exc()
 
-    from benchmarks import (bench_kernels, bench_prox_time, bench_roofline,
-                            bench_training)
+    from benchmarks import (bench_kernels, bench_prefix_cache,
+                            bench_prox_time, bench_roofline, bench_training)
     section("fig1", lambda: bench_prox_time.run(csv))
     section("kernels", lambda: bench_kernels.run(csv))
     section("roofline", lambda: bench_roofline.run(csv))
+    section("prefix", lambda: bench_prefix_cache.run(csv))
     section("table1", lambda: bench_training.run(csv, num_steps=args.steps))
 
     if failures:

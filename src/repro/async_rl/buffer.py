@@ -18,6 +18,7 @@ class RolloutQueue:
 
     def __init__(self, capacity: int = 16, max_staleness: int = 4):
         self._q: "queue.Queue[RolloutBatch]" = queue.Queue(maxsize=capacity)
+        self.capacity = capacity
         self.max_staleness = max_staleness
         self.dropped = 0
         self._lock = threading.Lock()
@@ -36,7 +37,9 @@ class RolloutQueue:
         out: List[RolloutBatch] = []
         while len(out) < n:
             batch = self._q.get(timeout=timeout)
-            if current_version - batch.version > self.max_staleness:
+            # min_version: with per-token stamps (interruptible serving)
+            # the *oldest* token in the batch decides its staleness
+            if current_version - batch.min_version() > self.max_staleness:
                 with self._lock:
                     self.dropped += 1
                 continue
@@ -45,3 +48,8 @@ class RolloutQueue:
 
     def qsize(self) -> int:
         return self._q.qsize()
+
+    @property
+    def depth_fraction(self) -> float:
+        """Queue fullness in [0, 1] — the scheduler's backpressure signal."""
+        return self._q.qsize() / self.capacity if self.capacity else 0.0

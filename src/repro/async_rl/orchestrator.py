@@ -50,6 +50,9 @@ class StepRecord:
     train_time_s: float
     wall_time_s: float
     eval_reward: Optional[float] = None  # held-out eval (when scheduled)
+    # serving control-plane snapshot (staleness distribution, prefix-cache
+    # hit rate, queue delay, page utilization, interrupt counts)
+    serving: Optional[Dict[str, float]] = None
 
 
 def _rollout_once(engine: RolloutEngine, task: ArithmeticTask,
@@ -70,25 +73,63 @@ class AsyncOrchestrator:
     def __init__(self, cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
                  method: str = "loglinear", n_prompts: int = 16,
                  max_new_tokens: int = 8, queue_capacity: int = 4,
-                 seed: int = 0):
+                 seed: int = 0, use_control_plane: bool = False,
+                 serve_kwargs: Optional[Dict] = None):
         self.cfg, self.rl, self.task, self.method = cfg, rl, task, method
         self.n_prompts = n_prompts
+        self.max_new_tokens = max_new_tokens
         self.engine = RolloutEngine(cfg, rl, max_new_tokens)
         self.trainer = Trainer(cfg, rl, method)
         self.queue = RolloutQueue(queue_capacity, rl.max_staleness)
         self.seed = seed
         self._stop = threading.Event()
         self._rollout_times: List[float] = []
+        # serving control plane (interruptible continuous batching with a
+        # radix prefix cache) instead of the run-to-completion engine
+        self.use_control_plane = use_control_plane
+        self._serve_kwargs = serve_kwargs or {}
+        self.control_plane = None
+
+    def _build_control_plane(self, store: WeightStore):
+        from repro.rollout.continuous import ContinuousBatchingEngine
+        from repro.serving import (AdmissionScheduler, SchedulerConfig,
+                                   ServingControlPlane)
+        kw = dict(max_seqs=self.n_prompts * self.rl.group_size,
+                  block_size=8, n_blocks=512, max_blocks_per_seq=16)
+        kw.update(self._serve_kwargs)
+        srv = ContinuousBatchingEngine(self.cfg, rl=self.rl, **kw)
+        return ServingControlPlane(
+            srv, store,
+            AdmissionScheduler(SchedulerConfig(d_max=self.rl.max_staleness)),
+            rollout_queue=self.queue)
+
+    def _rollout_once_cp(self, key):
+        """Group rollout through the serving control plane: GRPO members
+        share one prefill via the radix cache, and weight publishes landing
+        mid-batch are absorbed with per-token version stamps."""
+        batch = self.task.sample(self.n_prompts)
+        group = self.rl.group_size
+        prompts = np.repeat(batch.prompts, group, axis=0)
+        lengths = np.repeat(batch.prompt_lengths, group)
+        answers = [a for a in batch.answers for _ in range(group)]
+        rb = self.control_plane.generate_batch(
+            prompts, lengths, key, max_new=self.max_new_tokens)
+        completions = self.engine.completions(rb)
+        rewards = self.task.rewards(completions, answers)
+        return rb, rewards
 
     def _rollout_worker(self, store: WeightStore):
         key = jax.random.PRNGKey(self.seed + 1)
         while not self._stop.is_set():
-            params, version = store.latest()
             key, sub = jax.random.split(key)
             t0 = time.perf_counter()
-            rb, rewards = _rollout_once(
-                self.engine, self.task, params, version, self.n_prompts,
-                self.rl.group_size, sub)
+            if self.control_plane is not None:
+                rb, rewards = self._rollout_once_cp(sub)
+            else:
+                params, version = store.latest()
+                rb, rewards = _rollout_once(
+                    self.engine, self.task, params, version, self.n_prompts,
+                    self.rl.group_size, sub)
             self._rollout_times.append(time.perf_counter() - t0)
             rb.rewards = rewards  # piggyback
             if not self.queue.push(rb, timeout=1.0):
@@ -97,6 +138,8 @@ class AsyncOrchestrator:
     def run(self, state: TrainState, num_steps: int
             ) -> (TrainState, List[StepRecord]):
         store = WeightStore(state.params, int(state.version))
+        if self.use_control_plane:
+            self.control_plane = self._build_control_plane(store)
         worker = threading.Thread(target=self._rollout_worker,
                                   args=(store,), daemon=True)
         t_start = time.perf_counter()
@@ -111,6 +154,8 @@ class AsyncOrchestrator:
                 state, m = self.trainer.step(state, tb)
                 train_t = time.perf_counter() - t0
                 store.publish(state.params, int(state.version))
+                serving = (self.control_plane.metrics.snapshot()
+                           if self.control_plane is not None else None)
                 records.append(StepRecord(
                     step=step, reward=m["reward_mean"], loss=m["loss"],
                     entropy=m.get("entropy", 0.0), iw_max=m["iw_max"],
@@ -120,7 +165,8 @@ class AsyncOrchestrator:
                     rollout_time_s=(np.mean(self._rollout_times[-3:])
                                     if self._rollout_times else 0.0),
                     train_time_s=train_t,
-                    wall_time_s=time.perf_counter() - t_start))
+                    wall_time_s=time.perf_counter() - t_start,
+                    serving=serving))
         finally:
             self._stop.set()
             worker.join(timeout=10.0)

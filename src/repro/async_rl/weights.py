@@ -8,7 +8,7 @@ launch/train.py).
 from __future__ import annotations
 
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 
 class WeightStore:
@@ -16,11 +16,25 @@ class WeightStore:
         self._lock = threading.Lock()
         self._params = params
         self._version = version
+        self._listeners: List[Callable[[int], None]] = []
+
+    def subscribe(self, fn: Callable[[int], None]) -> None:
+        """Register a publish listener (serving control plane interrupts).
+
+        ``fn(version)`` is invoked synchronously after every publish, from
+        the publisher's thread and outside the lock — listeners must be
+        cheap and thread-safe (the InterruptController just sets an event).
+        """
+        with self._lock:
+            self._listeners.append(fn)
 
     def publish(self, params: Any, version: int) -> None:
         with self._lock:
             self._params = params
             self._version = version
+            listeners = list(self._listeners)
+        for fn in listeners:
+            fn(version)
 
     def latest(self) -> Tuple[Any, int]:
         with self._lock:

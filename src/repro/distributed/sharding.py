@@ -18,6 +18,23 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisRule = Tuple[str, Union[str, Tuple[str, ...], None]]
 
+
+def abstract_mesh(axis_sizes: Sequence[int],
+                  axis_names: Sequence[str]) -> "jax.sharding.AbstractMesh":
+    """Version-portable ``AbstractMesh`` constructor.
+
+    jax <= 0.4.x takes a tuple of ``(name, size)`` pairs; newer releases
+    take ``(axis_sizes, axis_names)``. Feeding the new calling convention
+    to the old constructor leaves the mesh shape as a bare int, which is
+    the ``TypeError: 'int' object is not iterable`` failure mode — so we
+    normalize here instead of at every call site.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
 # Default logical->mesh mapping. "embed" is the FSDP axis (weight d_model
 # dims sharded over data); activations use "act_embed" which is never
 # sharded over data.

@@ -39,6 +39,27 @@ class Request:
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # --- staleness-aware control plane bookkeeping -----------------------
+    # behavior logprob of each generated token (under the params that
+    # produced its logits) and the weight version of those params: the
+    # per-token [B, T] stamps a3po.staleness consumes.
+    gen_logp: List[float] = dataclasses.field(default_factory=list)
+    token_versions: List[int] = dataclasses.field(default_factory=list)
+    priority: int = 0            # scheduler class (lower = more urgent)
+    submit_version: int = 0      # weight version when the request arrived
+    prefix_hit_tokens: int = 0   # prompt tokens served from the radix cache
+    preempt_count: int = 0
+
+    def min_version(self) -> int:
+        return min(self.token_versions) if self.token_versions \
+            else self.submit_version
+
+    def reset_generation(self) -> None:
+        """Discard sampled state for a fresh restart (preempt/resubmit)."""
+        self.generated = []
+        self.gen_logp = []
+        self.token_versions = []
+        self.done = False
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -105,12 +126,16 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, *, max_seqs: int = 8,
                  block_size: int = 16, n_blocks: int = 256,
                  max_blocks_per_seq: int = 16,
-                 rl: Optional[RLConfig] = None, greedy: bool = False):
+                 rl: Optional[RLConfig] = None, greedy: bool = False,
+                 prefix_cache=None):
         assert cfg.arch_type in ("dense",), "paged serving: dense archs"
         self.cfg = cfg
         self.rl = rl or RLConfig()
         self.greedy = greedy
         self.max_seqs = max_seqs
+        # duck-typed serving.prefix_cache.RadixPrefixCache (kept untyped to
+        # avoid a rollout -> serving import cycle)
+        self.prefix_cache = prefix_cache
         # reserve the last block as the scratch target for idle slots
         self.allocator = pc.BlockAllocator(n_blocks - 1)
         self.trash_block = n_blocks - 1
@@ -128,65 +153,181 @@ class ContinuousBatchingEngine:
         self._pending: List[Request] = []
         self._next_logits = jnp.zeros((max_seqs, cfg.vocab_size),
                                       jnp.float32)
+        # weight version of the params that produced each slot's
+        # _next_logits row — the stamp for the *next* sampled token
+        self._logits_version: List[int] = [0] * max_seqs
         self._rid = 0
 
     # ------------------------------------------------------------- requests
-    def submit(self, prompt_ids, max_new: int = 16) -> int:
+    def submit(self, prompt_ids, max_new: int = 16, *, priority: int = 0,
+               submit_version: int = 0) -> int:
         self._rid += 1
         self._pending.append(Request(self._rid, np.asarray(prompt_ids),
-                                     max_new))
+                                     max_new, priority=priority,
+                                     submit_version=submit_version))
         return self._rid
 
-    def _admit(self, params) -> None:
-        for slot, req in self.slots.items():
-            if req is not None or not self._pending:
-                continue
+    def _cache_plan(self, prompt) -> tuple:
+        """(n_blocks, n_tokens) the radix cache will actually serve.
+
+        Returns (0, 0) when the match is too small to pay off: the cached
+        suffix path costs one full-width decode step per remaining prompt
+        token, so a tiny match on a long prompt would be far slower than
+        one dense prefill.
+        """
+        if self.prefix_cache is None:
+            return 0, 0
+        P = len(prompt)
+        n_blocks, n_matched = self.prefix_cache.lookup(prompt,
+                                                       max_tokens=P - 1)
+        suffix = (P - 1) - n_matched
+        if n_matched == 0 or suffix > max(2 * self.state.block_size,
+                                          (P - 1) // 2):
+            return 0, 0
+        return n_blocks, n_matched
+
+    def blocks_needed(self, prompt, max_new: int) -> int:
+        """Fresh blocks a request needs, given current prefix-cache state.
+
+        Reserves headroom for the copy-on-write forks a cached partial
+        block can trigger (one for a matched shared tail, one for this
+        prompt's own tail once the cache holds a reference to it).
+        """
+        P = len(prompt)
+        bs = self.state.block_size
+        total = -(-(P + max_new) // bs)
+        if self.prefix_cache is None:
+            return total
+        n_blocks, n_matched = self._cache_plan(prompt)
+        spare = (1 if n_matched % bs else 0) + (1 if P % bs else 0)
+        return total - n_blocks + spare
+
+    def _reclaim_headroom(self, n: int = 1) -> None:
+        """Evict cache-only blocks so a decode-time alloc (capacity growth
+        or CoW fork) cannot OOM while reclaimable blocks exist."""
+        if self.prefix_cache is not None and self.allocator.n_free < n:
+            self.prefix_cache.evict(n - self.allocator.n_free)
+
+    def free_slots(self) -> List[int]:
+        return [s for s, r in self.slots.items() if r is None]
+
+    def _admit(self, params, version: int = 0) -> None:
+        for slot in self.free_slots():
+            if not self._pending:
+                break
             nxt = self._pending[0]
-            blocks_needed = -(-(len(nxt.prompt) + nxt.max_new)
-                              // self.state.block_size)
-            if blocks_needed > self.allocator.n_free:
+            if self.blocks_needed(nxt.prompt, nxt.max_new) \
+                    > self.allocator.n_free:
                 break
             self._pending.pop(0)
-            self.slots[slot] = nxt
-            self._prefill_into(params, slot, nxt)
+            self.admit_request(params, slot, nxt, version=version)
 
-    def _prefill_into(self, params, slot: int, req: Request) -> None:
+    def admit_request(self, params, slot: int, req: Request,
+                      version: int = 0) -> None:
+        """Place ``req`` into ``slot`` and prefill (control-plane entry)."""
+        assert self.slots[slot] is None, f"slot {slot} occupied"
+        self.slots[slot] = req
+        self._prefill_into(params, slot, req, version=version)
+
+    def _prefill_into(self, params, slot: int, req: Request,
+                      version: int = 0) -> None:
         P = len(req.prompt)
-        self.state = pc.map_sequence(self.state, self.allocator, slot,
-                                     P + req.max_new)
-        toks = jnp.asarray(req.prompt)[None, :]
-        hidden, cache = M.prefill(params, self.cfg, toks, max_len=P)
-        # copy dense prefill K/V into this sequence's pages
         bs = self.state.block_size
-        table = np.asarray(self.state.block_tables[slot])
-        k = cache["attn"]["k"][:, 0]  # [L, P, KV, hd]
-        v = cache["attn"]["v"][:, 0]
-        pool_k, pool_v = self.state.pool_k, self.state.pool_v
-        for start in range(0, P, bs):
-            blk = int(table[start // bs])
-            n = min(bs, P - start)
-            pool_k = pool_k.at[:, blk, :n].set(k[:, start:start + n])
-            pool_v = pool_v.at[:, blk, :n].set(v[:, start:start + n])
-        self.state = dataclasses.replace(
-            self.state, pool_k=pool_k, pool_v=pool_v,
-            seq_lens=self.state.seq_lens.at[slot].set(P))
-        logits = logits_from_hidden(params["embedding"], hidden[:, -1],
-                                    self.cfg)
-        self._next_logits = self._next_logits.at[slot].set(logits[0])
+        matched: List[int] = []
+        n_matched = 0
+        if self._cache_plan(req.prompt)[1]:
+            # cap at P-1: the last prompt token always runs through the
+            # decode step so the slot has next-token logits to sample from
+            matched, n_matched = self.prefix_cache.match(req.prompt,
+                                                         max_tokens=P - 1)
+        if n_matched:
+            self.state = pc.map_sequence_prefixed(
+                self.state, self.allocator, slot, matched, n_matched,
+                P + req.max_new)
+            self._prefill_suffix(params, slot, req.prompt[n_matched:])
+        else:
+            self.state = pc.map_sequence(self.state, self.allocator, slot,
+                                         P + req.max_new)
+            toks = jnp.asarray(req.prompt)[None, :]
+            hidden, cache = M.prefill(params, self.cfg, toks, max_len=P)
+            # copy dense prefill K/V into this sequence's pages
+            table = np.asarray(self.state.block_tables[slot])
+            k = cache["attn"]["k"][:, 0]  # [L, P, KV, hd]
+            v = cache["attn"]["v"][:, 0]
+            pool_k, pool_v = self.state.pool_k, self.state.pool_v
+            for start in range(0, P, bs):
+                blk = int(table[start // bs])
+                n = min(bs, P - start)
+                pool_k = pool_k.at[:, blk, :n].set(k[:, start:start + n])
+                pool_v = pool_v.at[:, blk, :n].set(v[:, start:start + n])
+            self.state = dataclasses.replace(
+                self.state, pool_k=pool_k, pool_v=pool_v,
+                seq_lens=self.state.seq_lens.at[slot].set(P))
+            logits = logits_from_hidden(params["embedding"], hidden[:, -1],
+                                        self.cfg)
+            self._next_logits = self._next_logits.at[slot].set(logits[0])
+        req.prefix_hit_tokens = n_matched
+        if self.prefix_cache is not None:
+            table = np.asarray(self.state.block_tables[slot])
+            n_prompt_blocks = -(-P // bs)
+            self.prefix_cache.insert(
+                req.prompt, [int(b) for b in table[:n_prompt_blocks]])
+        self._logits_version[slot] = version
+
+    def _prefill_suffix(self, params, slot: int, suffix) -> None:
+        """Prefill the uncached prompt tail through the paged decode path.
+
+        The cached prefix KV is already resident in this slot's blocks, so
+        each remaining prompt token is one decode step that attends over
+        the shared pages. Every *other* slot is pointed at the scratch
+        block for the duration so its pool pages and sampled logits are
+        untouched.
+        """
+        for t in suffix:
+            self._reclaim_headroom(2)  # capacity growth + possible fork
+            self.state = pc.ensure_capacity(self.state, self.allocator,
+                                            slot)
+            self.state = pc.ensure_writable(self.state, self.allocator,
+                                            slot)
+            bt = np.full((self.max_seqs, self.state.max_blocks), -1,
+                         np.int32)
+            bt[:, 0] = self.trash_block
+            bt[slot] = np.asarray(self.state.block_tables[slot])
+            lens = np.zeros((self.max_seqs,), np.int32)
+            lens[slot] = int(self.state.seq_lens[slot])
+            tokens = np.full((self.max_seqs,), int(t), np.int32)
+            logits, pool_k, pool_v = _paged_decode_step(
+                params, self.cfg, self.state.pool_k, self.state.pool_v,
+                jnp.asarray(bt), jnp.asarray(lens), jnp.asarray(tokens))
+            self.state = dataclasses.replace(
+                self.state, pool_k=pool_k, pool_v=pool_v,
+                seq_lens=self.state.seq_lens.at[slot].add(1))
+            self._next_logits = self._next_logits.at[slot].set(logits[slot])
 
     # ----------------------------------------------------------------- step
-    def step(self, params, key) -> List[Request]:
-        """One decode step for every active slot; returns finished reqs."""
+    def step(self, params, key, version: int = 0) -> List[Request]:
+        """One decode step for every active slot; returns finished reqs.
+
+        ``params``/``version`` may change between calls (interruptible
+        generation): in-flight sequences keep their paged KV and resume
+        under the new weights, and every sampled token is stamped with the
+        version of the params that produced its logits.
+        """
         if self.greedy:
-            tokens, _ = greedy_token(self._next_logits)
+            tokens, logps = greedy_token(self._next_logits)
         else:
-            tokens, _ = sample_token(self._next_logits, key,
-                                     temperature=self.rl.temperature,
-                                     top_p=self.rl.top_p)
+            tokens, logps = sample_token(self._next_logits, key,
+                                         temperature=self.rl.temperature,
+                                         top_p=self.rl.top_p)
         tokens = np.asarray(tokens)
+        logps = np.asarray(logps)
         active = [s for s, r in self.slots.items() if r is not None]
         for slot in active:
+            self._reclaim_headroom(2)  # capacity growth + possible fork
             self.state = pc.ensure_capacity(self.state, self.allocator,
+                                            slot)
+            # CoW guard: never write into a radix-cache-shared block
+            self.state = pc.ensure_writable(self.state, self.allocator,
                                             slot)
         logits, pool_k, pool_v = _paged_decode_step(
             params, self.cfg, self.state.pool_k, self.state.pool_v,
@@ -204,18 +345,30 @@ class ContinuousBatchingEngine:
             req = self.slots[slot]
             t = int(tokens[slot])
             req.generated.append(t)
+            req.gen_logp.append(float(logps[slot]))
+            req.token_versions.append(int(self._logits_version[slot]))
             if t == tok.EOS or len(req.generated) >= req.max_new:
                 req.done = True
                 finished.append(req)
-                self.state = pc.release_sequence(self.state, self.allocator,
-                                                 slot)
-                # park the idle slot back on the scratch block
-                self.state = dataclasses.replace(
-                    self.state,
-                    block_tables=self.state.block_tables.at[slot, 0].set(
-                        self.trash_block))
-                self.slots[slot] = None
+                self.release_slot(slot)
+        # logits computed this step came from `params`
+        for slot in active:
+            if self.slots.get(slot) is not None:
+                self._logits_version[slot] = version
         return finished
+
+    def release_slot(self, slot: int) -> Optional[Request]:
+        """Free a slot's pages (finish or preemption) and park it."""
+        req = self.slots[slot]
+        self.state = pc.release_sequence(self.state, self.allocator, slot)
+        # park the idle slot back on the scratch block
+        self.state = dataclasses.replace(
+            self.state,
+            block_tables=self.state.block_tables.at[slot, 0].set(
+                self.trash_block))
+        self.slots[slot] = None
+        self._logits_version[slot] = 0
+        return req
 
     # ------------------------------------------------------------------ run
     def run(self, params, key, max_steps: int = 10_000) -> List[Request]:

@@ -32,10 +32,20 @@ class RolloutBatch:
     gen_mask: np.ndarray       # [B, N] 1.0 up to & including EOS
     version: int = 0           # behavior policy version (stamped by caller)
     rewards: Optional[np.ndarray] = None  # [B] attached after verification
+    # [B, N] per-token weight versions when generation crossed a publish
+    # (interruptible serving); None => every token was sampled at `version`
+    gen_versions: Optional[np.ndarray] = None
 
     @property
     def batch_size(self) -> int:
         return self.tokens.shape[0]
+
+    def min_version(self) -> int:
+        """Oldest behavior version in the batch (staleness gate input)."""
+        if self.gen_versions is None:
+            return self.version
+        stamped = self.gen_versions[self.gen_mask > 0]
+        return int(stamped.min()) if stamped.size else self.version
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "max_new", "temperature",

@@ -42,19 +42,53 @@ class PagedCacheState:
 
 
 class BlockAllocator:
-    """Host-side free-list over pool blocks (shared across layers)."""
+    """Host-side free-list over pool blocks (shared across layers).
+
+    Blocks are reference-counted so the radix prefix cache and multiple
+    sequences can share one physical block (GRPO group members sharing a
+    prefilled prompt). ``alloc`` hands out blocks at refcount 1;
+    ``release`` decrements and only returns a block to the free list when
+    its count reaches zero.
+    """
 
     def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
         self.free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self.refcount: Dict[int, int] = {}
+        self.forks = 0  # copy-on-write forks performed (metrics)
 
     def alloc(self, n: int) -> List[int]:
         if len(self.free) < n:
             raise RuntimeError(f"paged cache OOM: need {n} blocks, "
                                f"have {len(self.free)}")
-        return [self.free.pop() for _ in range(n)]
+        blocks = [self.free.pop() for _ in range(n)]
+        for b in blocks:
+            self.refcount[b] = 1
+        return blocks
+
+    def incref(self, block: int) -> None:
+        assert block in self.refcount, f"incref of unallocated block {block}"
+        self.refcount[block] += 1
+
+    def decref(self, block: int) -> bool:
+        """Drop one reference; returns True when the block was freed."""
+        rc = self.refcount.get(block)
+        assert rc is not None and rc > 0, \
+            f"decref of unallocated block {block}"
+        if rc == 1:
+            del self.refcount[block]
+            self.free.append(block)
+            return True
+        self.refcount[block] = rc - 1
+        return False
+
+    def refs(self, block: int) -> int:
+        return self.refcount.get(block, 0)
 
     def release(self, blocks: List[int]) -> None:
-        self.free.extend(b for b in blocks if b >= 0)
+        for b in blocks:
+            if b >= 0:
+                self.decref(b)
 
     @property
     def n_free(self) -> int:
@@ -158,6 +192,70 @@ def ensure_capacity(state: PagedCacheState, allocator: BlockAllocator,
         state = dataclasses.replace(
             state, block_tables=state.block_tables.at[slot, block_idx].set(
                 blk))
+    return state
+
+
+def map_sequence_prefixed(state: PagedCacheState, allocator: BlockAllocator,
+                          slot: int, prefix_blocks: List[int],
+                          n_prefix_tokens: int, n_tokens: int
+                          ) -> PagedCacheState:
+    """Map a sequence whose first ``n_prefix_tokens`` live in shared blocks.
+
+    ``prefix_blocks`` must already carry a reference for this sequence
+    (the prefix cache increfs on match); only the remainder of the table
+    is freshly allocated. ``seq_lens`` starts at ``n_prefix_tokens`` —
+    the cached KV is already resident, so prefill only has to run the
+    suffix.
+    """
+    bs = state.block_size
+    n_needed = -(-n_tokens // bs)
+    assert n_needed <= state.max_blocks, "sequence exceeds max_blocks_per_seq"
+    assert len(prefix_blocks) <= n_needed, (prefix_blocks, n_tokens)
+    fresh = allocator.alloc(n_needed - len(prefix_blocks))
+    table = np.full((state.max_blocks,), -1, np.int32)
+    table[: len(prefix_blocks)] = prefix_blocks
+    table[len(prefix_blocks): n_needed] = fresh
+    return dataclasses.replace(
+        state,
+        block_tables=state.block_tables.at[slot].set(jnp.asarray(table)),
+        seq_lens=state.seq_lens.at[slot].set(n_prefix_tokens),
+    )
+
+
+def fork_block(state: PagedCacheState, allocator: BlockAllocator,
+               block: int) -> Tuple[PagedCacheState, int]:
+    """Copy-on-write: clone ``block`` into a fresh private block.
+
+    Copies the pool contents across all layers and drops one reference on
+    the shared original.
+    """
+    (new,) = allocator.alloc(1)
+    pool_k = state.pool_k.at[:, new].set(state.pool_k[:, block])
+    pool_v = state.pool_v.at[:, new].set(state.pool_v[:, block])
+    allocator.decref(block)
+    allocator.forks += 1
+    return dataclasses.replace(state, pool_k=pool_k, pool_v=pool_v), new
+
+
+def ensure_writable(state: PagedCacheState, allocator: BlockAllocator,
+                    slot: int) -> PagedCacheState:
+    """CoW guard: fork the block the next token writes into if shared.
+
+    A slot resuming on top of radix-cached prompt blocks may have its
+    write position inside a block other sequences (or the cache itself)
+    still reference; writing there would corrupt the shared prefix.
+    """
+    bs = state.block_size
+    length = int(state.seq_lens[slot])
+    block_idx = length // bs
+    if block_idx >= state.max_blocks:
+        return state  # ensure_capacity raises the real error
+    blk = int(state.block_tables[slot, block_idx])
+    if blk >= 0 and allocator.refs(blk) > 1:
+        state, new = fork_block(state, allocator, blk)
+        state = dataclasses.replace(
+            state, block_tables=state.block_tables.at[slot, block_idx].set(
+                new))
     return state
 
 

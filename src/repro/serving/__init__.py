@@ -1,0 +1,19 @@
+"""Staleness-aware rollout control plane (scheduler / interrupts /
+prefix cache / metrics) between the async orchestrator and the
+continuous-batching engine."""
+from repro.serving.control_plane import ServingControlPlane
+from repro.serving.interrupts import InterruptController, InterruptEvent
+from repro.serving.metrics import Histogram, ServingMetrics
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
+
+__all__ = [
+    "AdmissionScheduler",
+    "Histogram",
+    "InterruptController",
+    "InterruptEvent",
+    "RadixPrefixCache",
+    "SchedulerConfig",
+    "ServingControlPlane",
+    "ServingMetrics",
+]

@@ -1,0 +1,208 @@
+"""The rollout control plane: scheduler + interrupts + prefix cache + metrics.
+
+Sits between ``async_rl.orchestrator`` and ``rollout.continuous``:
+
+    trainer ──publish──▶ WeightStore ──interrupt──▶ ServingControlPlane
+                                                        │  admit / preempt
+                                                        ▼
+                                            ContinuousBatchingEngine
+                                                        │  finished Requests
+                                                        ▼
+                              RolloutBatch (per-token logp + version stamps)
+
+Each ``step()``: poll the store (in-flight sequences resume under freshly
+published weights, keeping their paged KV), preempt anything past the
+staleness budget, admit from the priority queue through the radix prefix
+cache, run one decode step, and fold everything into metrics.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.async_rl.buffer import RolloutQueue
+from repro.async_rl.weights import WeightStore
+from repro.data import tokenizer as tok
+from repro.rollout.continuous import ContinuousBatchingEngine, Request
+from repro.rollout.engine import RolloutBatch
+from repro.serving.interrupts import InterruptController
+from repro.serving.metrics import ServingMetrics
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
+
+
+class ServingControlPlane:
+    def __init__(self, engine: ContinuousBatchingEngine, store: WeightStore,
+                 scheduler: Optional[AdmissionScheduler] = None,
+                 metrics: Optional[ServingMetrics] = None,
+                 rollout_queue: Optional[RolloutQueue] = None,
+                 use_prefix_cache: bool = True,
+                 resubmit_dropped: bool = True):
+        self.engine = engine
+        self.store = store
+        # explicit None check: an empty AdmissionScheduler is falsy (len 0)
+        self.scheduler = AdmissionScheduler(SchedulerConfig()) \
+            if scheduler is None else scheduler
+        self.metrics = ServingMetrics() if metrics is None else metrics
+        self.rollout_queue = rollout_queue
+        self.interrupts = InterruptController(store)
+        self.resubmit_dropped = resubmit_dropped
+        if use_prefix_cache and engine.prefix_cache is None:
+            engine.prefix_cache = RadixPrefixCache(engine.allocator,
+                                                   engine.state.block_size)
+        self._rid = 0
+        self._finished: Dict[int, Request] = {}
+        self.dropped_requests: List[Request] = []
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def n_inflight(self) -> int:
+        return sum(1 for r in self.engine.slots.values() if r is not None)
+
+    def _queue_frac(self) -> float:
+        q = self.rollout_queue
+        return q.depth_fraction if q is not None else 0.0
+
+    # ------------------------------------------------------------- requests
+    def submit(self, prompt, max_new: int = 16, priority: int = 0) -> int:
+        self._rid += 1
+        req = Request(self._rid, np.asarray(prompt), max_new,
+                      priority=priority,
+                      submit_version=self.store.version)
+        self.scheduler.enqueue(req, time.perf_counter())
+        return self._rid
+
+    # ----------------------------------------------------------------- step
+    def step(self, key) -> List[Request]:
+        now = time.perf_counter()
+        inflight = self.n_inflight
+        params, version, interrupted = self.interrupts.poll(inflight)
+        if interrupted and inflight:
+            self.metrics.interrupts += 1
+            self.metrics.resumed_sequences += inflight
+
+        # staleness-budget preemption of in-flight work
+        for slot in self.scheduler.check_preempt(self.engine.slots, version):
+            req = self.engine.release_slot(slot)
+            self.metrics.preemptions += 1
+            self.scheduler.handle_preempted(req, version, now)
+
+        # admission through the priority + backpressure + budget gates
+        queue_frac = self._queue_frac()
+        for slot in self.engine.free_slots():
+            picked = self.scheduler.pop_admissible(
+                version, engine=self.engine, queue_frac=queue_frac)
+            if picked is None:
+                break
+            req, t_enq = picked
+            self.engine.admit_request(params, slot, req, version=version)
+            self.metrics.observe_request(
+                prompt_tokens=len(req.prompt),
+                prefix_hit=req.prefix_hit_tokens,
+                queue_delay_s=max(now - t_enq, 0.0))
+
+        # budget-dropped queued requests: resubmit fresh, or surface
+        for req in self.scheduler.take_dropped():
+            self.metrics.drops += 1
+            if self.resubmit_dropped:
+                # fresh lease: discard any partial generation (its stamps
+                # are over budget and its tokens never see the new KV) and
+                # restart from the prompt. Churn is self-limiting: versions
+                # only advance while the trainer is fed, so a starved
+                # trainer stops publishing and the restarts complete.
+                req.reset_generation()
+                req.preempt_count = 0
+                req.submit_version = version
+                self.scheduler.enqueue(req, now)
+            else:
+                self.dropped_requests.append(req)
+
+        finished: List[Request] = []
+        if self.n_inflight:
+            n_active = self.n_inflight
+            finished = self.engine.step(params, key, version=version)
+            self.metrics.decode_tokens += n_active
+            alloc = self.engine.allocator
+            self.metrics.page_utilization.observe(
+                1.0 - alloc.n_free / max(alloc.n_blocks, 1))
+            self.metrics.cow_forks = alloc.forks
+        for req in finished:
+            self._finished[req.rid] = req
+            self.metrics.observe_finished(
+                staleness_values=[version - v for v in req.token_versions])
+        return finished
+
+    # ------------------------------------------------------------ batch api
+    def generate_batch(self, prompts: np.ndarray,
+                       prompt_lengths: np.ndarray, key, max_new: int,
+                       priority: int = 0, max_steps: int = 10_000
+                       ) -> RolloutBatch:
+        """Submit a (padded, ragged) prompt batch; drive steps to completion.
+
+        The drop-in replacement for ``RolloutEngine.generate`` in the async
+        loop — but weight publishes landing mid-batch are *absorbed*
+        (sequences resume, stamps record the boundary) instead of being
+        serialized against generation.
+        """
+        B = prompts.shape[0]
+        rids = []
+        for i in range(B):
+            L = int(prompt_lengths[i])
+            rids.append(self.submit(prompts[i, :L], max_new,
+                                    priority=priority))
+        pending = set(rids)
+        steps = idle = 0
+        while pending:
+            key, sub = jax.random.split(key)
+            finished = self.step(sub)
+            for req in finished:
+                pending.discard(req.rid)
+            # non-resubmitted drops never finish; account for them
+            if not self.resubmit_dropped:
+                pending -= {r.rid for r in self.dropped_requests}
+            if not finished and self.n_inflight == 0:
+                # admission held (backpressure / staleness budget) with
+                # nothing decoding: idle-wait instead of burning max_steps
+                idle += 1
+                if idle > 20_000:
+                    raise RuntimeError(
+                        "control plane idle-stalled: admission held with "
+                        "no work in flight (backpressure never released?)")
+                time.sleep(0.005)
+                continue
+            idle = 0
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("control plane exceeded max_steps")
+        reqs = [self._finished.pop(rid) for rid in rids
+                if rid in self._finished]
+        return self.rollout_batch(reqs, prompts.shape[1], max_new)
+
+    def rollout_batch(self, reqs: List[Request], prompt_pad: int,
+                      max_new: int) -> RolloutBatch:
+        """Assemble finished requests into a stamped ``RolloutBatch``."""
+        B = len(reqs)
+        tokens = np.full((B, prompt_pad + max_new), tok.PAD, np.int32)
+        lengths = np.zeros((B,), np.int32)
+        gen_logp = np.zeros((B, max_new), np.float32)
+        gen_mask = np.zeros((B, max_new), np.float32)
+        gen_versions = np.zeros((B, max_new), np.int32)
+        for i, r in enumerate(reqs):
+            L = len(r.prompt)
+            n = len(r.generated)
+            lengths[i] = L
+            tokens[i, :L] = r.prompt
+            tokens[i, L: L + n] = r.generated
+            gen_logp[i, :n] = r.gen_logp
+            gen_mask[i, :n] = 1.0
+            gen_versions[i, :n] = r.token_versions
+            gen_versions[i, n:] = (r.token_versions[-1] if n
+                                   else r.submit_version)
+        version = int(gen_versions[gen_mask > 0].min()) \
+            if B and gen_mask.any() else self.store.version
+        return RolloutBatch(tokens=tokens, prompt_lengths=lengths,
+                            gen_logp=gen_logp, gen_mask=gen_mask,
+                            version=version, gen_versions=gen_versions)

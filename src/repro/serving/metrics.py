@@ -1,0 +1,132 @@
+"""Serving-side observability: counters + histograms for the control plane.
+
+Everything here is host-side and allocation-free on the hot path (fixed
+bucket arrays, float adds). ``ServingMetrics.snapshot()`` flattens into the
+plain dict the orchestrator attaches to ``StepRecord.serving``, so the
+staleness distribution, prefix-cache hit rate, queue delay, page
+utilization, and interrupt counts ride along with every training step's
+record.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+
+class Histogram:
+    """Fixed-bucket histogram (prometheus-style cumulative-free buckets)."""
+
+    def __init__(self, bounds: Sequence[float]):
+        self.bounds = tuple(bounds)
+        self.counts = [0] * (len(self.bounds) + 1)  # last = +inf overflow
+        self.total = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def observe(self, x: float) -> None:
+        i = 0
+        for b in self.bounds:
+            if x <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.total += 1
+        self.sum += x
+        self.max = max(self.max, x)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.total if self.total else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Bucket-upper-bound quantile estimate (0 < q <= 1)."""
+        if not self.total:
+            return 0.0
+        target = q * self.total
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= target:
+                return self.bounds[i] if i < len(self.bounds) else self.max
+        return self.max
+
+    def snapshot(self, prefix: str) -> Dict[str, float]:
+        return {
+            f"{prefix}_mean": self.mean,
+            f"{prefix}_p50": self.quantile(0.5),
+            f"{prefix}_p99": self.quantile(0.99),
+            f"{prefix}_max": self.max,
+            f"{prefix}_count": float(self.total),
+        }
+
+
+def _staleness_hist() -> Histogram:
+    return Histogram((0, 1, 2, 4, 8, 16, 32))
+
+
+def _delay_hist() -> Histogram:
+    return Histogram((0.001, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 30.0))
+
+
+def _util_hist() -> Histogram:
+    return Histogram((0.1, 0.25, 0.5, 0.75, 0.9, 1.0))
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Control-plane counters; one instance per ServingControlPlane."""
+
+    staleness: Histogram = dataclasses.field(default_factory=_staleness_hist)
+    queue_delay_s: Histogram = dataclasses.field(default_factory=_delay_hist)
+    page_utilization: Histogram = dataclasses.field(
+        default_factory=_util_hist)
+    prefix_hit_tokens: int = 0
+    prefix_prompt_tokens: int = 0
+    prefill_tokens_computed: int = 0
+    decode_tokens: int = 0
+    interrupts: int = 0          # weight publishes observed with work in flight
+    resumed_sequences: int = 0   # in-flight seqs carried across a publish
+    preemptions: int = 0
+    drops: int = 0               # admission-refused, staleness budget blown
+    admitted: int = 0
+    completed: int = 0
+    cow_forks: int = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        if not self.prefix_prompt_tokens:
+            return 0.0
+        return self.prefix_hit_tokens / self.prefix_prompt_tokens
+
+    def observe_request(self, *, prompt_tokens: int, prefix_hit: int,
+                        queue_delay_s: float) -> None:
+        self.admitted += 1
+        self.prefix_prompt_tokens += prompt_tokens
+        self.prefix_hit_tokens += prefix_hit
+        self.prefill_tokens_computed += prompt_tokens - prefix_hit
+        self.queue_delay_s.observe(queue_delay_s)
+
+    def observe_finished(self, *, staleness_values) -> None:
+        self.completed += 1
+        for d in staleness_values:
+            self.staleness.observe(float(d))
+
+    def snapshot(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        out.update(self.staleness.snapshot("staleness"))
+        out.update(self.queue_delay_s.snapshot("queue_delay_s"))
+        out.update(self.page_utilization.snapshot("page_util"))
+        out.update(
+            prefix_hit_rate=self.prefix_hit_rate,
+            prefix_hit_tokens=float(self.prefix_hit_tokens),
+            prefill_tokens_computed=float(self.prefill_tokens_computed),
+            decode_tokens=float(self.decode_tokens),
+            interrupts=float(self.interrupts),
+            resumed_sequences=float(self.resumed_sequences),
+            preemptions=float(self.preemptions),
+            drops=float(self.drops),
+            admitted=float(self.admitted),
+            completed=float(self.completed),
+            cow_forks=float(self.cow_forks),
+        )
+        return out

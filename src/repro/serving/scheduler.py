@@ -1,0 +1,116 @@
+"""Admission control over the continuous-batching engine's fixed slots.
+
+Three gates sit between ``submit`` and a slot (the "Staleness-Learning
+Rate Scaling Laws" prescription: enforce the staleness budget in the
+scheduler instead of hoping the queue stays shallow):
+
+* **priority classes** — a binary heap keyed on (priority, arrival), so
+  urgent traffic (e.g. the trainer's on-policy refresh batch) overtakes
+  bulk rollouts;
+* **backpressure** — when the downstream ``RolloutQueue`` is nearly full
+  the trainer is the bottleneck, so generating more stale data is pure
+  waste: non-urgent admits are held at ``backpressure_high`` and all
+  admits at ``backpressure_full``;
+* **staleness budget** — a request is never admitted once
+  ``now_version - submit_version`` exceeds ``d_max`` (it is dropped, or
+  resubmitted fresh by the control plane), and in-flight sequences whose
+  oldest token stamp falls behind the budget are preempted, returning all
+  their refcounted blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from repro.rollout.continuous import Request
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    d_max: int = 4                   # staleness budget, in weight versions
+    backpressure_high: float = 0.75  # queue depth fraction: hold prio > 0
+    backpressure_full: float = 1.0   # queue depth fraction: hold everything
+    preempt_action: str = "requeue"  # "requeue" (restart fresh) | "drop"
+    max_preempts: int = 2            # requeue at most this many times
+
+
+class AdmissionScheduler:
+    def __init__(self, config: Optional[SchedulerConfig] = None):
+        self.config = config or SchedulerConfig()
+        self._heap: List[Tuple[int, int, float, Request]] = []
+        self._seq = 0
+        self.dropped: List[Request] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def enqueue(self, req: Request, now_s: float = 0.0) -> None:
+        heapq.heappush(self._heap, (req.priority, self._seq, now_s, req))
+        self._seq += 1
+
+    def pop_admissible(self, now_version: int, *, engine,
+                       queue_frac: float = 0.0
+                       ) -> Optional[Tuple[Request, float]]:
+        """Best admissible request, or None.
+
+        Requests already past the staleness budget are dropped on the spot
+        (collected in ``self.dropped`` for the control plane's resubmit
+        policy). Block availability is checked against the engine's
+        prefix-cache-aware estimate, with cache eviction as the fallback
+        before giving up.
+        """
+        cfg = self.config
+        while self._heap:
+            prio, _, t_enq, req = self._heap[0]
+            if now_version - req.submit_version > cfg.d_max:
+                heapq.heappop(self._heap)
+                self.dropped.append(req)
+                continue
+            if queue_frac >= cfg.backpressure_full:
+                return None
+            if prio > 0 and queue_frac >= cfg.backpressure_high:
+                return None
+            needed = engine.blocks_needed(req.prompt, req.max_new)
+            if needed > engine.allocator.n_free:
+                cache = getattr(engine, "prefix_cache", None)
+                if cache is not None:
+                    cache.evict(needed - engine.allocator.n_free)
+                if needed > engine.allocator.n_free:
+                    return None
+            heapq.heappop(self._heap)
+            return req, t_enq
+        return None
+
+    def check_preempt(self, slots: Dict[int, Optional[Request]],
+                      now_version: int) -> List[int]:
+        """Slots whose oldest token stamp exceeds the staleness budget."""
+        out = []
+        for slot, req in slots.items():
+            if req is None:
+                continue
+            if now_version - req.min_version() > self.config.d_max:
+                out.append(slot)
+        return out
+
+    def handle_preempted(self, req: Request, now_version: int,
+                         now_s: float = 0.0) -> str:
+        """Requeue (restarted fresh) or drop a preempted request.
+
+        Returns the action taken. Requeued requests lose their generated
+        tokens — their stamps are already over budget, so the KV and
+        partial generation are unusable for training anyway.
+        """
+        req.preempt_count += 1
+        if (self.config.preempt_action == "drop"
+                or req.preempt_count > self.config.max_preempts):
+            self.dropped.append(req)
+            return "drop"
+        req.reset_generation()
+        req.submit_version = now_version
+        self.enqueue(req, now_s)
+        return "requeue"
+
+    def take_dropped(self) -> List[Request]:
+        out, self.dropped = self.dropped, []
+        return out

@@ -40,18 +40,31 @@ class TrainBatch:
     tokens: jax.Array        # [B, T]
     response_mask: jax.Array  # [B, T-1] (1 on generated-token predictions)
     behav_logp: jax.Array    # [B, T-1] (0 outside mask)
-    versions: jax.Array      # [B] behavior policy versions
+    # behavior policy versions: [B] (one per sequence) or [B, T-1]
+    # (per-token stamps from the interruptible serving control plane)
+    versions: jax.Array
     rewards: jax.Array       # [B]
 
 
 def assemble_train_batch(rollouts: List[RolloutBatch],
                          rewards: np.ndarray) -> TrainBatch:
-    """Scatter ragged generation logps into [B, T-1] aligned tensors."""
+    """Scatter ragged generation logps into [B, T-1] aligned tensors.
+
+    If any rollout carries per-token version stamps (``gen_versions``,
+    produced when generation crossed a weight publish), ``versions`` is
+    emitted as [B, T-1] so ``a3po.staleness`` sees the true per-token
+    ``d`` — the alpha interpolation then varies *within* a sequence at
+    the publish boundary. Otherwise the legacy [B] form is kept.
+    """
     tokens = np.concatenate([r.tokens for r in rollouts], axis=0)
     B, T = tokens.shape
     behav = np.zeros((B, T - 1), np.float32)
     mask = np.zeros((B, T - 1), np.float32)
-    versions = np.zeros((B,), np.int32)
+    per_token = any(r.gen_versions is not None for r in rollouts)
+    if per_token:
+        versions = np.zeros((B, T - 1), np.int32)
+    else:
+        versions = np.zeros((B,), np.int32)
     row = 0
     for r in rollouts:
         N = r.gen_logp.shape[1]
@@ -61,7 +74,13 @@ def assemble_train_batch(rollouts: List[RolloutBatch],
             # predicted at t = L-1
             behav[row, L - 1: L - 1 + N] = r.gen_logp[b]
             mask[row, L - 1: L - 1 + N] = r.gen_mask[b]
-            versions[row] = r.version
+            if per_token:
+                versions[row, :] = r.version
+                if r.gen_versions is not None:
+                    versions[row, L - 1: L - 1 + N] = np.where(
+                        r.gen_mask[b] > 0, r.gen_versions[b], r.version)
+            else:
+                versions[row] = r.version
             row += 1
     return TrainBatch(
         tokens=jnp.asarray(tokens),
@@ -181,8 +200,15 @@ class Trainer:
                                               for m in all_metrics]))
         out["prox_time_s"] = prox_time
         out["reward_mean"] = float(batch.rewards.mean())
-        out["staleness_mean"] = float(
-            (state.version - batch.versions).mean())
+        d = state.version - batch.versions
+        if batch.versions.ndim == 2:
+            # per-token stamps: average over response tokens only (prompt
+            # positions carry a filler version, not behavior staleness)
+            msum = float(jnp.sum(batch.response_mask))
+            out["staleness_mean"] = float(
+                jnp.sum(d * batch.response_mask) / max(msum, 1.0))
+        else:
+            out["staleness_mean"] = float(d.mean())
         new_state = TrainState(params, opt, state.version + 1)
         return new_state, out
 

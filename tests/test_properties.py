@@ -7,7 +7,10 @@ plus system invariants (masking, group normalization).
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import RLConfig
 from repro.core.a3po import alpha_from_staleness, compute_prox_logp_approximation

@@ -1,0 +1,219 @@
+"""Serving control plane: interruptible generation (per-token version
+stamps), radix prefix cache (shared prefills, CoW blocks), and admission
+scheduling (staleness budget, block accounting)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.async_rl.weights import WeightStore
+from repro.configs.base import RLConfig
+from repro.configs.registry import get_config
+from repro.core.a3po import alpha_from_staleness, staleness
+from repro.models import model as M
+from repro.rollout.continuous import ContinuousBatchingEngine, Request
+from repro.rollout.paged_cache import BlockAllocator
+from repro.serving import (
+    AdmissionScheduler,
+    RadixPrefixCache,
+    SchedulerConfig,
+    ServingControlPlane,
+)
+from repro.training.trainer import assemble_train_batch
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("toy-2m"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, **kw):
+    base = dict(max_seqs=2, block_size=4, n_blocks=64, max_blocks_per_seq=8,
+                greedy=True)
+    base.update(kw)
+    return ContinuousBatchingEngine(cfg, **base)
+
+
+def _prompt(cfg, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(4, cfg.vocab_size, size=n).astype(np.int32)
+
+
+# ------------------------------------------------- (a) interruptible stamps
+def test_publish_mid_generation_stamps_and_roundtrip(setup):
+    """A weight publish mid-decode leaves a visible per-token version
+    boundary, and the stamped batch flows through assemble_train_batch ->
+    a3po.staleness -> alpha_from_staleness as [B, T]."""
+    cfg, params = setup
+    store = WeightStore(params, 0)
+    eng = _engine(cfg)
+    cp = ServingControlPlane(eng, store,
+                             AdmissionScheduler(SchedulerConfig(d_max=100)))
+    prompt = _prompt(cfg)
+    max_new = 8
+    cp.submit(prompt, max_new=max_new)
+    key = jax.random.PRNGKey(1)
+    done = []
+    steps = 0
+    while not done:
+        key, sub = jax.random.split(key)
+        done = cp.step(sub)
+        steps += 1
+        if steps == 4:
+            store.publish(params, 2)  # same params, new version: pure stamp
+        assert steps < 50
+    req = done[0]
+    stamps = req.token_versions
+    assert len(stamps) == len(req.generated) == len(req.gen_logp)
+    # visible boundary: early tokens at v0, later tokens at v2, monotone
+    assert stamps[0] == 0 and stamps[-1] == 2
+    assert stamps == sorted(stamps)
+    assert set(stamps) == {0, 2}
+    assert cp.metrics.interrupts == 1
+
+    # round trip into the training stack as [B, T]
+    rb = cp.rollout_batch([req], prompt_pad=len(prompt), max_new=max_new)
+    assert rb.gen_versions is not None and rb.min_version() == 0
+    tb = assemble_train_batch([rb], np.zeros((1,), np.float32))
+    T = rb.tokens.shape[1]
+    assert tb.versions.shape == (1, T - 1) == tb.behav_logp.shape
+    d = staleness(tb.versions, current_version=3)
+    alpha = alpha_from_staleness(d, RLConfig())
+    assert d.shape == alpha.shape == (1, T - 1)
+    # per-token alpha differs across the publish boundary within one seq
+    resp = np.asarray(tb.response_mask[0]) > 0
+    alphas_on_response = np.unique(np.asarray(alpha[0])[resp])
+    assert len(alphas_on_response) == 2  # 1/3 (stale seg) vs 1/1 (fresh seg)
+    np.testing.assert_allclose(sorted(alphas_on_response), [1.0 / 3.0, 1.0],
+                               rtol=1e-6)
+    # behavior logprobs are segment-wise present wherever stamped
+    assert np.all(np.asarray(tb.behav_logp[0])[resp] != 0.0)
+
+
+# ------------------------------------------------- (b) radix prefix sharing
+def test_prefix_cache_shares_blocks_and_matches_uncached(setup):
+    """The second of two prefix-sharing requests allocates strictly fewer
+    fresh blocks than an independent prefill and yields identical logits
+    and greedy continuations."""
+    cfg, params = setup
+    prompt = _prompt(cfg, n=12)  # 3 full blocks at block_size=4
+    max_new = 4
+
+    # uncached reference: each admit pays the full allocation
+    eng_nc = _engine(cfg)
+    free0 = eng_nc.allocator.n_free
+    eng_nc.admit_request(params, 0, Request(1, prompt, max_new))
+    used_first = free0 - eng_nc.allocator.n_free
+    eng_nc.admit_request(params, 1, Request(2, prompt, max_new))
+    used_second_uncached = (free0 - used_first) - eng_nc.allocator.n_free
+    assert used_second_uncached == used_first == 4  # ceil(16/4)
+
+    # cached: second admit reuses the radix-matched prompt blocks
+    eng_c = _engine(cfg)
+    eng_c.prefix_cache = RadixPrefixCache(eng_c.allocator,
+                                          eng_c.state.block_size)
+    cfree0 = eng_c.allocator.n_free
+    eng_c.admit_request(params, 0, Request(1, prompt, max_new))
+    cused_first = cfree0 - eng_c.allocator.n_free
+    eng_c.admit_request(params, 1, Request(2, prompt, max_new))
+    cused_second = (cfree0 - cused_first) - eng_c.allocator.n_free
+    req2 = eng_c.slots[1]
+    # 2 full blocks + 3-token partial overlap with the third (cap at P-1)
+    assert req2.prefix_hit_tokens == 11
+    assert cused_second < used_second_uncached, (cused_second,
+                                                 used_second_uncached)
+
+    # identical logits at the sampling point, cached vs uncached
+    np.testing.assert_allclose(np.asarray(eng_c._next_logits[1]),
+                               np.asarray(eng_nc._next_logits[1]),
+                               rtol=2e-4, atol=2e-4)
+
+    # and identical greedy continuations all the way through
+    key = jax.random.PRNGKey(3)
+    done_nc, done_c = [], []
+    while len(done_c) < 2 or len(done_nc) < 2:
+        key, sub = jax.random.split(key)
+        done_nc += eng_nc.step(params, sub)
+        done_c += eng_c.step(params, sub)
+    gen = {r.rid: r.generated for r in done_c}
+    gen_ref = {r.rid: r.generated for r in done_nc}
+    assert gen == gen_ref
+
+
+def test_prefix_cache_eviction_restores_allocator(setup):
+    """Cache-held references are reclaimable: after release + eviction the
+    allocator is back to its initial free count with empty refcounts."""
+    cfg, params = setup
+    eng = _engine(cfg)
+    eng.prefix_cache = RadixPrefixCache(eng.allocator, eng.state.block_size)
+    free0 = eng.allocator.n_free
+    eng.admit_request(params, 0, Request(1, _prompt(cfg), 4))
+    eng.release_slot(0)
+    held = eng.prefix_cache.n_cached_blocks
+    assert eng.allocator.n_free == free0 - held  # only the cache holds refs
+    freed = eng.prefix_cache.evict(held)
+    assert freed == held
+    assert eng.allocator.n_free == free0
+    assert eng.allocator.refcount == {}
+
+
+# ---------------------------------------------- (c) scheduler + accounting
+def test_scheduler_staleness_budget_and_block_release(setup):
+    """The scheduler never admits past the staleness budget, and preempted
+    sequences return every refcounted block to the allocator."""
+    cfg, params = setup
+    store = WeightStore(params, 0)
+    eng = _engine(cfg)
+    sched = AdmissionScheduler(SchedulerConfig(d_max=2,
+                                               preempt_action="drop"))
+    cp = ServingControlPlane(eng, store, sched, use_prefix_cache=False,
+                             resubmit_dropped=False)
+    free0 = eng.allocator.n_free
+    key = jax.random.PRNGKey(5)
+
+    # (1) queued request past the budget is refused admission, not run
+    cp.submit(_prompt(cfg), max_new=4)
+    store.publish(params, 5)  # staleness 5 > d_max=2 before admission
+    key, sub = jax.random.split(key)
+    assert cp.step(sub) == []
+    assert cp.metrics.admitted == 0 and cp.metrics.drops == 1
+    assert cp.n_inflight == 0
+    assert eng.allocator.n_free == free0
+    assert eng.allocator.refcount == {}
+
+    # (2) in-flight sequence whose stamps fall behind the budget is
+    # preempted and all its blocks come back
+    cp.submit(_prompt(cfg), max_new=16)
+    key, sub = jax.random.split(key)
+    cp.step(sub)  # admits at v5 and decodes one token
+    assert cp.n_inflight == 1 and cp.metrics.admitted == 1
+    assert eng.allocator.n_free < free0
+    store.publish(params, 20)  # 20 - 5 > d_max
+    key, sub = jax.random.split(key)
+    cp.step(sub)
+    assert cp.metrics.preemptions == 1
+    assert cp.n_inflight == 0
+    assert eng.allocator.n_free == free0
+    assert eng.allocator.refcount == {}
+
+
+def test_scheduler_priority_order(setup):
+    """Lower priority class is admitted first regardless of arrival."""
+    cfg, params = setup
+    store = WeightStore(params, 0)
+    eng = _engine(cfg, max_seqs=1)  # one slot: admission order observable
+    cp = ServingControlPlane(eng, store,
+                             AdmissionScheduler(SchedulerConfig(d_max=100)),
+                             use_prefix_cache=False)
+    rid_bulk = cp.submit(_prompt(cfg, seed=1), max_new=2, priority=1)
+    rid_urgent = cp.submit(_prompt(cfg, seed=2), max_new=2, priority=0)
+    key = jax.random.PRNGKey(7)
+    order = []
+    while len(order) < 2:
+        key, sub = jax.random.split(key)
+        order += [r.rid for r in cp.step(sub)]
+    assert order == [rid_urgent, rid_bulk]
