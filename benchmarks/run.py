@@ -25,14 +25,21 @@ def main() -> None:
                             "prefix"])
     p.add_argument("--steps", type=int, default=30,
                    help="RL steps for the training bench")
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke mode: tiny step counts, and only the "
+                        "fig1/table1 sections unless --only is given")
     args = p.parse_args()
+    steps = min(args.steps, 3) if args.quick else args.steps
+    sft_steps = 10 if args.quick else 150
 
     csv = CsvOut()
     csv.header()
     failures = []
 
-    def section(name, fn):
+    def section(name, fn, skip_quick=False):
         if args.only and args.only != name:
+            return
+        if args.quick and skip_quick and not args.only:
             return
         print(f"# --- {name} ---", flush=True)
         try:
@@ -45,10 +52,11 @@ def main() -> None:
     from benchmarks import (bench_kernels, bench_prefix_cache,
                             bench_prox_time, bench_roofline, bench_training)
     section("fig1", lambda: bench_prox_time.run(csv))
-    section("kernels", lambda: bench_kernels.run(csv))
-    section("roofline", lambda: bench_roofline.run(csv))
-    section("prefix", lambda: bench_prefix_cache.run(csv))
-    section("table1", lambda: bench_training.run(csv, num_steps=args.steps))
+    section("kernels", lambda: bench_kernels.run(csv), skip_quick=True)
+    section("roofline", lambda: bench_roofline.run(csv), skip_quick=True)
+    section("prefix", lambda: bench_prefix_cache.run(csv), skip_quick=True)
+    section("table1", lambda: bench_training.run(csv, num_steps=steps,
+                                                 sft_steps=sft_steps))
 
     if failures:
         print(f"# FAILED sections: {failures}", file=sys.stderr)

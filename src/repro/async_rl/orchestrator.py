@@ -53,6 +53,11 @@ class StepRecord:
     # serving control-plane snapshot (staleness distribution, prefix-cache
     # hit rate, queue delay, page utilization, interrupt counts)
     serving: Optional[Dict[str, float]] = None
+    # training-engine telemetry: response tokens updated this step and
+    # device->host transfers the compiled step performed (1 for the scan
+    # engine; +1 for the explicit prox pass of the 'recompute' baseline)
+    train_tokens: float = 0.0
+    host_syncs: float = 0.0
 
 
 def _rollout_once(engine: RolloutEngine, task: ArithmeticTask,
@@ -166,7 +171,9 @@ class AsyncOrchestrator:
                                     if self._rollout_times else 0.0),
                     train_time_s=train_t,
                     wall_time_s=time.perf_counter() - t_start,
-                    serving=serving))
+                    serving=serving,
+                    train_tokens=m.get("tokens", 0.0),
+                    host_syncs=m.get("host_syncs", 0.0)))
         finally:
             self._stop.set()
             worker.join(timeout=10.0)
@@ -181,13 +188,14 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
                    record_hook: Optional[Callable[[int, Dict], None]] = None,
                    eval_every: int = 0,
                    eval_fn: Optional[Callable] = None,
+                   num_microbatches: int = 1,
                    ) -> (TrainState, List[StepRecord]):
     """Deterministic async simulation: behavior policy lags ``staleness``
     versions behind (0 == synchronous on-policy). ``eval_fn(params)`` is
     invoked every ``eval_every`` steps (the paper's held-out eval worker,
     Fig. 3); results land in ``StepRecord.eval_reward``."""
     engine = RolloutEngine(cfg, rl, max_new_tokens)
-    trainer = Trainer(cfg, rl, method)
+    trainer = Trainer(cfg, rl, method, num_microbatches=num_microbatches)
     key = jax.random.PRNGKey(seed)
     state = init_state or trainer.init_state(jax.random.PRNGKey(seed + 7))
     history: deque = deque(maxlen=staleness + 1)
@@ -213,7 +221,9 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
             iw_min=m["iw_min"], clipped_tokens=m["clipped_tokens"],
             staleness_mean=m["staleness_mean"], prox_time_s=m["prox_time_s"],
             rollout_time_s=rollout_t, train_time_s=train_t,
-            wall_time_s=time.perf_counter() - t_start)
+            wall_time_s=time.perf_counter() - t_start,
+            train_tokens=m.get("tokens", 0.0),
+            host_syncs=m.get("host_syncs", 0.0))
         if eval_fn and eval_every and (step + 1) % eval_every == 0:
             rec.eval_reward = float(eval_fn(state.params))
         records.append(rec)

@@ -1,11 +1,18 @@
 from repro.core.a3po import (  # noqa: F401
     alpha_from_staleness,
     compute_prox_logp_approximation,
+    compute_prox_logp_kl_adaptive,
+    kl_adaptive_alpha,
     staleness,
 )
 from repro.core.advantages import (  # noqa: F401
     broadcast_over_tokens,
     group_normalized_advantages,
+)
+from repro.core.objective import (  # noqa: F401
+    fused_a3po_loss,
+    policy_objective,
+    resolve_alpha,
 )
 from repro.core.losses import (  # noqa: F401
     coupled_ppo_loss,

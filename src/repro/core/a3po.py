@@ -28,11 +28,18 @@ def staleness(versions: jax.Array, current_version) -> jax.Array:
 
 def alpha_from_staleness(d: jax.Array, cfg: Optional[RLConfig] = None,
                          schedule: Optional[str] = None) -> jax.Array:
-    """Staleness-aware coefficient alpha (paper Eq. 4 + extensions)."""
+    """Staleness-aware coefficient alpha (paper Eq. 4 + extensions).
+
+    ``kl_adaptive`` is not a function of staleness alone (it needs the
+    behavior/target logps — see ``kl_adaptive_alpha`` and the single
+    dispatch point ``core.objective.resolve_alpha``); called with only
+    ``d`` it degrades gracefully to the paper's inverse schedule, the
+    staleness-only surrogate, instead of raising.
+    """
     cfg = cfg or RLConfig()
     schedule = schedule or cfg.alpha_schedule
     fresh = d < 1.0
-    if schedule == "inverse":  # the paper: alpha = 1/d, 0 at d=0
+    if schedule in ("inverse", "kl_adaptive"):  # paper: alpha = 1/d, 0 at d=0
         a = jnp.where(fresh, 0.0, 1.0 / jnp.maximum(d, 1.0))
     elif schedule == "exp":  # alpha = gamma^d (beyond-paper)
         a = jnp.where(fresh, 0.0, cfg.alpha_gamma ** d)
@@ -69,7 +76,7 @@ def compute_prox_logp_approximation(
     return jax.lax.stop_gradient(prox)
 
 
-def compute_prox_logp_kl_adaptive(
+def kl_adaptive_alpha(
     old_logp: jax.Array,        # log pi_behav  [B, T]
     logprobs: jax.Array,        # log pi_theta  [B, T]
     mask: jax.Array,            # [B, T] response mask
@@ -79,7 +86,7 @@ def compute_prox_logp_kl_adaptive(
 ) -> jax.Array:
     """Beyond-paper: pick alpha per sequence so the anchor sits a *fixed
     KL distance* from the target policy rather than a staleness-scheduled
-    fraction.
+    fraction. Returns [B, 1], stop_gradient'ed.
 
     Under the log-linear family, KL(pi_theta || pi_prox) scales ~
     alpha^2 * KL(pi_theta || pi_behav) (quadratic in the interpolation
@@ -95,6 +102,21 @@ def compute_prox_logp_kl_adaptive(
     kl_hat = jnp.abs(jnp.sum(diff * mask, axis=-1) / denom)
     alpha = jnp.sqrt(target_kl / jnp.maximum(kl_hat, 1e-8))
     alpha = jnp.clip(alpha, alpha_min, alpha_max)[..., None]
+    return jax.lax.stop_gradient(alpha)
+
+
+def compute_prox_logp_kl_adaptive(
+    old_logp: jax.Array,        # log pi_behav  [B, T]
+    logprobs: jax.Array,        # log pi_theta  [B, T]
+    mask: jax.Array,            # [B, T] response mask
+    target_kl: float = 0.05,
+    alpha_min: float = 0.0,
+    alpha_max: float = 1.0,
+) -> jax.Array:
+    """KL-adaptive proximal anchor: the log-linear interpolation at the
+    per-sequence ``kl_adaptive_alpha`` weight. Stop_gradient'ed."""
+    alpha = kl_adaptive_alpha(old_logp, logprobs, mask, target_kl,
+                              alpha_min, alpha_max)
     prox = alpha * old_logp.astype(jnp.float32) \
         + (1.0 - alpha) * logprobs.astype(jnp.float32)
     return jax.lax.stop_gradient(prox)

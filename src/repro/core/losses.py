@@ -1,93 +1,24 @@
-"""Policy-gradient objectives: coupled PPO/GRPO, decoupled PPO, A-3PO.
+"""Thin compatibility layer over ``core.objective``.
 
-All losses operate on per-token log-probabilities (what the rollout engine
-and the model's scoring path produce) and a per-token response mask. They
-return (scalar_loss, metrics) where metrics mirror the paper's Figs. 4-6:
-entropy, clipped-token counts, importance-weight max/min.
+The policy-gradient objectives (coupled PPO/GRPO, decoupled PPO, fused
+A-3PO) live in ``repro.core.objective`` — the unified, kernel-backed
+interface the training engine scans over. This module keeps the original
+import surface (``policy_loss`` and the two modular losses) stable for
+older call sites and tests.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import RLConfig
-from repro.core.a3po import (
-    compute_prox_logp_approximation,
-    compute_prox_logp_kl_adaptive,
+from repro.core.objective import (  # noqa: F401
+    Metrics,
+    coupled_ppo_loss,
+    decoupled_ppo_loss,
+    policy_objective,
 )
-
-Metrics = Dict[str, jax.Array]
-
-
-def _masked_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
-    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-
-
-def _masked_max(x, mask):
-    return jnp.max(jnp.where(mask > 0, x, -jnp.inf))
-
-
-def _masked_min(x, mask):
-    return jnp.min(jnp.where(mask > 0, x, jnp.inf))
-
-
-def _clip_objective(ratio: jax.Array, adv: jax.Array, eps: float
-                    ) -> Tuple[jax.Array, jax.Array]:
-    """PPO clipped surrogate per token. Returns (objective, clipped_mask)."""
-    unclipped = ratio * adv
-    clipped = jnp.clip(ratio, 1.0 - eps, 1.0 + eps) * adv
-    obj = jnp.minimum(unclipped, clipped)
-    was_clipped = (unclipped > clipped).astype(jnp.float32)
-    return obj, was_clipped
-
-
-def coupled_ppo_loss(
-    logp: jax.Array,        # log pi_theta  [B, T]
-    behav_logp: jax.Array,  # log pi_behav  [B, T]
-    advantages: jax.Array,  # [B, T] (already broadcast / normalized)
-    mask: jax.Array,        # [B, T] response mask
-    cfg: RLConfig,
-    entropy: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, Metrics]:
-    """Standard PPO/GRPO (Eq. 1): pi_old doubles as IS weight + anchor."""
-    logp = logp.astype(jnp.float32)
-    behav_logp = behav_logp.astype(jnp.float32)
-    ratio = jnp.exp(logp - behav_logp)
-    obj, was_clipped = _clip_objective(ratio, advantages, cfg.clip_eps)
-    loss = -_masked_mean(obj, mask)
-    metrics = _common_metrics(ratio, ratio, was_clipped, mask, entropy)
-    if entropy is not None and cfg.entropy_coef:
-        loss = loss - cfg.entropy_coef * _masked_mean(entropy, mask)
-    return loss, metrics
-
-
-def decoupled_ppo_loss(
-    logp: jax.Array,
-    behav_logp: jax.Array,
-    prox_logp: jax.Array,   # frozen trust-region anchor [B, T]
-    advantages: jax.Array,
-    mask: jax.Array,
-    cfg: RLConfig,
-    entropy: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, Metrics]:
-    """Decoupled loss (Eq. 2): behavior IS weight x prox-anchored clip."""
-    logp = logp.astype(jnp.float32)
-    behav_logp = behav_logp.astype(jnp.float32)
-    prox_logp = jax.lax.stop_gradient(prox_logp.astype(jnp.float32))
-    # importance weight pi_prox / pi_behav — detached, capped for stability
-    iw = jnp.exp(prox_logp - behav_logp)
-    iw = jnp.minimum(iw, cfg.behav_weight_cap)
-    iw = jax.lax.stop_gradient(iw)
-    # trust-region ratio pi_theta / pi_prox
-    ratio = jnp.exp(logp - prox_logp)
-    obj, was_clipped = _clip_objective(ratio, advantages, cfg.clip_eps)
-    loss = -_masked_mean(iw * obj, mask)
-    metrics = _common_metrics(iw, ratio, was_clipped, mask, entropy)
-    if entropy is not None and cfg.entropy_coef:
-        loss = loss - cfg.entropy_coef * _masked_mean(entropy, mask)
-    return loss, metrics
 
 
 def policy_loss(
@@ -102,38 +33,11 @@ def policy_loss(
     current_version=None,
     recomputed_prox_logp: Optional[jax.Array] = None,
     entropy: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, Metrics]:
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Dispatch: 'sync' (coupled), 'recompute' (decoupled, explicit prox),
-    'loglinear' (A-3PO)."""
-    if method == "sync":
-        return coupled_ppo_loss(logp, behav_logp, advantages, mask, cfg,
-                                entropy)
-    if method == "recompute":
-        assert recomputed_prox_logp is not None, \
-            "recompute method needs the explicit prox forward pass"
-        return decoupled_ppo_loss(logp, behav_logp, recomputed_prox_logp,
-                                  advantages, mask, cfg, entropy)
-    if method == "loglinear":
-        if cfg.alpha_schedule == "kl_adaptive":  # beyond-paper controller
-            prox = compute_prox_logp_kl_adaptive(behav_logp, logp, mask)
-        else:
-            assert versions is not None and current_version is not None
-            prox = compute_prox_logp_approximation(
-                behav_logp, logp, versions, current_version, cfg)
-        return decoupled_ppo_loss(logp, behav_logp, prox, advantages, mask,
-                                  cfg, entropy)
-    raise ValueError(f"unknown method {method!r}")
-
-
-def _common_metrics(iw, ratio, was_clipped, mask, entropy) -> Metrics:
-    m: Metrics = {
-        "iw_max": _masked_max(iw, mask),
-        "iw_min": _masked_min(iw, mask),
-        "iw_mean": _masked_mean(iw, mask),
-        "ratio_mean": _masked_mean(ratio, mask),
-        "clipped_tokens": jnp.sum(was_clipped * mask),
-        "clipped_frac": _masked_mean(was_clipped, mask),
-    }
-    if entropy is not None:
-        m["entropy"] = _masked_mean(entropy, mask)
-    return m
+    'loglinear' (A-3PO, fused kernel). Delegates to
+    ``objective.policy_objective``."""
+    return policy_objective(
+        method, logp, behav_logp, advantages, mask, cfg,
+        versions=versions, current_version=current_version,
+        recomputed_prox_logp=recomputed_prox_logp, entropy=entropy)

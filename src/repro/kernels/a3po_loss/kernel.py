@@ -3,7 +3,10 @@
 The paper computes prox interpolation, importance weight, trust-region
 ratio, clipping, and masking as ~10 separate elementwise HLO ops over the
 [B, T] token grid. This kernel fuses the whole objective into one VMEM
-pass — one HBM read per input tensor, one write per output.
+pass — one HBM read per input tensor, one write per output. Alongside the
+per-token loss and clip indicators it emits the importance weight and
+trust-region ratio, so the training metrics (iw max/min/mean, ratio mean)
+come out of the same pass instead of a second elementwise sweep.
 """
 from __future__ import annotations
 
@@ -16,7 +19,8 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(logp_ref, behav_ref, alpha_ref, adv_ref, mask_ref,
-            loss_ref, clip_ref, *, clip_eps: float, iw_cap: float):
+            loss_ref, clip_ref, iw_ref, ratio_ref, *, clip_eps: float,
+            iw_cap: float):
     logp = logp_ref[...].astype(jnp.float32)
     behav = behav_ref[...].astype(jnp.float32)
     alpha = alpha_ref[...].astype(jnp.float32)
@@ -31,6 +35,8 @@ def _kernel(logp_ref, behav_ref, alpha_ref, adv_ref, mask_ref,
     obj = jnp.minimum(unclipped, clipped)
     loss_ref[...] = -iw * obj * mask
     clip_ref[...] = (unclipped > clipped).astype(jnp.float32) * mask
+    iw_ref[...] = iw
+    ratio_ref[...] = ratio
 
 
 @functools.partial(jax.jit,
@@ -39,7 +45,7 @@ def a3po_loss_pallas(logp: jax.Array, behav_logp: jax.Array,
                      alpha: jax.Array, adv: jax.Array, mask: jax.Array, *,
                      clip_eps: float = 0.2, iw_cap: float = 5.0,
                      bt: int = 1024, interpret: bool = True
-                     ) -> Tuple[jax.Array, jax.Array]:
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     (T,) = logp.shape
     bt = min(bt, T)
     n_t = pl.cdiv(T, bt)
@@ -47,14 +53,14 @@ def a3po_loss_pallas(logp: jax.Array, behav_logp: jax.Array,
     pad = lambda x: jnp.pad(x, (0, Tp - T))  # noqa: E731
     args = [pad(a) for a in (logp, behav_logp, alpha, adv, mask)]
     kernel = functools.partial(_kernel, clip_eps=clip_eps, iw_cap=iw_cap)
-    loss, clip = pl.pallas_call(
+    out_struct = jax.ShapeDtypeStruct((Tp,), jnp.float32)
+    loss, clip, iw, ratio = pl.pallas_call(
         kernel,
         grid=(n_t,),
         in_specs=[pl.BlockSpec((bt,), lambda i: (i,))] * 5,
-        out_specs=(pl.BlockSpec((bt,), lambda i: (i,)),
-                   pl.BlockSpec((bt,), lambda i: (i,))),
-        out_shape=(jax.ShapeDtypeStruct((Tp,), jnp.float32),
-                   jax.ShapeDtypeStruct((Tp,), jnp.float32)),
+        out_specs=tuple(pl.BlockSpec((bt,), lambda i: (i,))
+                        for _ in range(4)),
+        out_shape=(out_struct,) * 4,
         interpret=interpret,
     )(*args)
-    return loss[:T], clip[:T]
+    return loss[:T], clip[:T], iw[:T], ratio[:T]

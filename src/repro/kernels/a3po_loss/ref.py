@@ -1,4 +1,9 @@
-"""Pure-jnp oracle for the fused A-3PO decoupled-loss kernel."""
+"""Pure-jnp oracle for the fused A-3PO decoupled-loss kernel.
+
+Differentiable end-to-end (the prox anchor and importance weight are
+stop_gradient'ed exactly like the modular loss), so tests can use it as
+the gradient oracle for the custom-VJP fused path.
+"""
 from __future__ import annotations
 
 from typing import Tuple
@@ -9,18 +14,21 @@ import jax.numpy as jnp
 
 def a3po_loss_ref(logp: jax.Array, behav_logp: jax.Array, alpha: jax.Array,
                   adv: jax.Array, mask: jax.Array, *, clip_eps: float,
-                  iw_cap: float) -> Tuple[jax.Array, jax.Array]:
+                  iw_cap: float) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                          jax.Array]:
     """Per-token fused A-3PO objective.
 
-    Returns (loss_tok [T] (negated objective, masked), clipped [T]).
+    Returns (loss_tok [T] (negated objective, masked), clipped [T] (masked),
+    iw [T], ratio [T]). ``iw``/``ratio`` are the raw per-token importance
+    weight and trust-region ratio the loss metrics are derived from.
     """
     logp = logp.astype(jnp.float32)
     behav = behav_logp.astype(jnp.float32)
     prox = jax.lax.stop_gradient(alpha * behav + (1.0 - alpha) * logp)
-    iw = jnp.minimum(jnp.exp(prox - behav), iw_cap)
+    iw = jax.lax.stop_gradient(jnp.minimum(jnp.exp(prox - behav), iw_cap))
     ratio = jnp.exp(logp - prox)
     unclipped = ratio * adv
     clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
     obj = jnp.minimum(unclipped, clipped)
     was_clipped = (unclipped > clipped).astype(jnp.float32) * mask
-    return -iw * obj * mask, was_clipped
+    return -iw * obj * mask, was_clipped, iw, ratio

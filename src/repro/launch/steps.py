@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig, RLConfig
-from repro.core.losses import policy_loss
+from repro.core.objective import policy_objective as policy_loss
 from repro.distributed.sharding import ShardingEnv, current_env
 from repro.kernels.logprob import token_logprob_entropy
 from repro.models import model as M

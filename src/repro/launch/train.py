@@ -3,8 +3,12 @@
 On a TPU slice this builds the production mesh, shards params/opt with the
 logical rules, and drives async A-3PO training with the rollout engine on a
 disjoint pod slice (weight publish = device_put across meshes). On CPU (this
-container) it runs the same code path on a local mesh at toy scale — the
-full-scale mesh program is exercised by ``dryrun.py``.
+container) ``--mesh local`` runs the same code path on a local mesh at toy
+scale, and ``--mesh prod``/``prod-multipod`` dry-runs the compiled training
+engine against the full-scale mesh: params and Adam moments are placed with
+``ShardingEnv``'s logical-axis rules, the scan-based ``train_step`` is
+lowered + compiled with those in_shardings, and the launcher verifies no
+weight matrix is left fully replicated.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch toy-2m --steps 20 \
@@ -12,19 +16,123 @@ Usage:
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
+import os
+import sys
 
-import jax
-import numpy as np
+# The production meshes need 256/512 placeholder host devices; XLA_FLAGS
+# must be set before the first jax import (same trick as launch/dryrun.py).
+if __name__ == "__main__" and any(
+        a in ("prod", "prod-multipod") or a.startswith("--mesh=prod")
+        for a in sys.argv):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
 
-from repro.configs.base import RLConfig
-from repro.configs.registry import get_config
-from repro.async_rl.orchestrator import simulate_async
-from repro.data.tasks import ArithmeticTask
-from repro.distributed.sharding import ShardingEnv, use_sharding
-from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.training.checkpoints import save_checkpoint
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import RLConfig  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+from repro.async_rl.orchestrator import simulate_async  # noqa: E402
+from repro.data.tasks import ArithmeticTask  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    ShardingEnv,
+    use_sharding,
+)
+from repro.launch.mesh import make_local_mesh, make_production_mesh  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.training import trainer as trainer_mod  # noqa: E402
+from repro.training.checkpoints import save_checkpoint  # noqa: E402
+
+
+def _replicated_weights(sh_tree, abs_tree) -> list:
+    """Paths of >=2-D tensors whose sharding spec is fully replicated."""
+    flat_sh, _ = jax.tree_util.tree_flatten_with_path(sh_tree)
+    flat_abs = jax.tree.leaves(abs_tree)
+    bad = []
+    for (path, sh), leaf in zip(flat_sh, flat_abs):
+        if len(leaf.shape) >= 2 and all(p is None for p in sh.spec):
+            bad.append(jax.tree_util.keystr(path))
+    return bad
+
+
+def sharded_dryrun(cfg, rl: RLConfig, env: ShardingEnv, method: str,
+                   batch_size: int = 32, seq_len: int = 14,
+                   num_microbatches: int = 1) -> None:
+    """Lower + compile the scan-based training engine on the production
+    mesh with ShardingEnv placements for params, Adam moments, and batch."""
+    params_abs = M.abstract_params(cfg, dtype=jnp.dtype(cfg.dtype))
+    param_sh = M.param_shardings(cfg, env)
+    opt_abs = steps.abstract_opt_state(params_abs)
+    opt_sh = steps.opt_shardings(param_sh, env)
+
+    bad = _replicated_weights(param_sh, params_abs)
+    assert not bad, f"fully-replicated weight tensors on the mesh: {bad}"
+    bad_m = _replicated_weights(opt_sh["m"], params_abs)
+    assert not bad_m, f"fully-replicated Adam moments on the mesh: {bad_m}"
+    print(f"[sharded] params + Adam moments carry ShardingEnv placements "
+          f"({len(jax.tree.leaves(param_sh))} tensors, 0 replicated "
+          f"weight matrices)")
+
+    B, T = batch_size, seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    batch_abs = dict(
+        version=jax.ShapeDtypeStruct((), i32),
+        tokens=jax.ShapeDtypeStruct((B, T), i32),
+        behav_logp=jax.ShapeDtypeStruct((B, T - 1), f32),
+        mask=jax.ShapeDtypeStruct((B, T - 1), f32),
+        versions=jax.ShapeDtypeStruct((B,), i32),
+        rewards=jax.ShapeDtypeStruct((B,), f32),
+    )
+    batch_sh = dict(
+        version=env.sharding((), ()),
+        tokens=env.sharding((B, T), ("batch", None)),
+        behav_logp=env.sharding((B, T - 1), ("batch", None)),
+        mask=env.sharding((B, T - 1), ("batch", None)),
+        versions=env.sharding((B,), ("batch",)),
+        rewards=env.sharding((B,), ("batch",)),
+    )
+
+    step = functools.partial(
+        trainer_mod._train_step_impl, cfg=cfg, rl=rl, method=method,
+        num_minibatches=rl.num_minibatches,
+        num_microbatches=num_microbatches)
+
+    def wrapped(params, opt, batch):
+        # the dry-run has no real recomputed prox; stand in with behav_logp
+        # (same shape/sharding) so the compiled program is representative
+        prox = batch["behav_logp"] if method == "recompute" else None
+        return step(params, opt, batch["version"], batch["tokens"],
+                    batch["behav_logp"], batch["mask"], batch["versions"],
+                    batch["rewards"], prox)
+
+    t0 = time.time()
+    with env.mesh, use_sharding(env):
+        jitted = jax.jit(wrapped, in_shardings=(param_sh, opt_sh, batch_sh),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    out_p_sh, _, _ = compiled.output_shardings
+    bad_out = [p for (p, sh), leaf in
+               zip(jax.tree_util.tree_flatten_with_path(out_p_sh)[0],
+                   jax.tree.leaves(params_abs))
+               if len(leaf.shape) >= 2 and sh.is_fully_replicated]
+    assert not bad_out, f"compiled step replicates weights: {bad_out}"
+    mem = compiled.memory_analysis()
+    print(f"[sharded] train_step lower {t_lower:.1f}s compile "
+          f"{t_compile:.1f}s | args "
+          f"{mem.argument_size_in_bytes / 2**20:.1f}MiB temp "
+          f"{mem.temp_size_in_bytes / 2**20:.1f}MiB | output params stay "
+          f"sharded")
 
 
 def main() -> None:
@@ -36,6 +144,8 @@ def main() -> None:
     p.add_argument("--staleness", type=int, default=2)
     p.add_argument("--mesh", default="local",
                    choices=["local", "prod", "prod-multipod"])
+    p.add_argument("--microbatch", type=int, default=1,
+                   help="gradient-accumulation microbatches per minibatch")
     p.add_argument("--checkpoint", default=None)
     args = p.parse_args()
 
@@ -51,24 +161,36 @@ def main() -> None:
     cfg = get_config(args.arch)
     if jax.default_backend() == "cpu":
         cfg = dataclasses.replace(cfg, dtype="float32")
-        if cfg.num_params() > 5e7:
-            raise SystemExit(
-                f"{args.arch} is full-scale ({cfg.num_params()/1e9:.0f}B "
-                "params): use launch.dryrun on this host, or a TPU slice "
-                "to actually train. Toy archs: toy-2m / toy-20m.")
 
     rl = RLConfig(group_size=4, num_minibatches=2, learning_rate=2e-4,
                   max_staleness=args.staleness + 1)
+
+    if args.mesh != "local" and jax.default_backend() == "cpu":
+        # full-scale mesh on the host platform: dry-run the compiled,
+        # sharded engine instead of stepping 256 emulated devices
+        sharded_dryrun(cfg, rl, env, args.method,
+                       num_microbatches=args.microbatch)
+        return
+
+    if jax.default_backend() == "cpu" and cfg.num_params() > 5e7:
+        raise SystemExit(
+            f"{args.arch} is full-scale ({cfg.num_params()/1e9:.0f}B "
+            "params): use launch.dryrun or --mesh prod on this host, or a "
+            "TPU slice to actually train. Toy archs: toy-2m / toy-20m.")
+
     task = ArithmeticTask(max_operand=9, n_terms=2, prompt_len=8)
 
     with mesh, use_sharding(env):
         state, recs = simulate_async(
             cfg, rl, task, args.method, args.steps, n_prompts=8,
             max_new_tokens=6,
-            staleness=0 if args.method == "sync" else args.staleness)
+            staleness=0 if args.method == "sync" else args.staleness,
+            num_microbatches=args.microbatch)
     for r in recs[:: max(1, len(recs) // 8)]:
         print(f"  step {r.step:3d} reward {r.reward:.3f} loss {r.loss:+.4f} "
-              f"prox {r.prox_time_s*1e3:.2f}ms stale {r.staleness_mean:.1f}")
+              f"prox {r.prox_time_s*1e3:.2f}ms stale {r.staleness_mean:.1f} "
+              f"tok/s {r.train_tokens / max(r.train_time_s, 1e-9):.0f} "
+              f"syncs {r.host_syncs:.0f}")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, {"params": state.params},
                         {"arch": args.arch, "method": args.method,

@@ -1,10 +1,20 @@
-"""RL trainer: scoring, prox recompute, minibatched A-3PO/decoupled/coupled
-updates — the training engine of the async system.
+"""RL training engine: one compiled, mesh-sharded update per training step.
 
 Matches the paper's procedure (§4.1): one *training step* consumes a rollout
 batch, optionally recomputes the proximal policy with an extra forward pass
 (method='recompute' — the cost A-3PO deletes), then performs
 ``num_minibatches`` gradient updates with the frozen anchor.
+
+Engine architecture (PR 2): the whole update path is a single jitted
+``train_step`` — advantages, a ``lax.scan`` over minibatches (each with an
+optional inner gradient-accumulation scan over microbatches), Adam, and
+metric accumulation all run on device. Metrics are packed into one array,
+so a training step costs exactly **one** host transfer (plus the explicit
+prox forward for the 'recompute' baseline, which is the point of the
+comparison). The loss routes through ``core.objective`` — the fused
+``kernels/a3po_loss`` Pallas path for 'loglinear'. Params and Adam moments
+are placed with the active ``ShardingEnv``'s logical rules, and batch
+tensors carry ("pod","data") sharding constraints.
 """
 from __future__ import annotations
 
@@ -19,7 +29,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
 from repro.core.advantages import group_normalized_advantages
-from repro.core.losses import policy_loss
+from repro.core.objective import policy_objective
+from repro.distributed.sharding import constrain, current_env
 from repro.kernels.logprob import token_logprob_entropy
 from repro.models import model as M
 from repro.models.layers import output_head_weight
@@ -55,6 +66,10 @@ def assemble_train_batch(rollouts: List[RolloutBatch],
     emitted as [B, T-1] so ``a3po.staleness`` sees the true per-token
     ``d`` — the alpha interpolation then varies *within* a sequence at
     the publish boundary. Otherwise the legacy [B] form is kept.
+
+    The scatter is vectorized: position t predicts tokens[t+1], so row b's
+    generated span starts at column prompt_lengths[b] - 1 — one fancy-index
+    write per rollout instead of a per-sequence Python loop.
     """
     tokens = np.concatenate([r.tokens for r in rollouts], axis=0)
     B, T = tokens.shape
@@ -68,20 +83,22 @@ def assemble_train_batch(rollouts: List[RolloutBatch],
     row = 0
     for r in rollouts:
         N = r.gen_logp.shape[1]
-        for b in range(r.batch_size):
-            L = int(r.prompt_lengths[b])
-            # position t predicts tokens[t+1]; first generated token is
-            # predicted at t = L-1
-            behav[row, L - 1: L - 1 + N] = r.gen_logp[b]
-            mask[row, L - 1: L - 1 + N] = r.gen_mask[b]
-            if per_token:
-                versions[row, :] = r.version
-                if r.gen_versions is not None:
-                    versions[row, L - 1: L - 1 + N] = np.where(
-                        r.gen_mask[b] > 0, r.gen_versions[b], r.version)
-            else:
-                versions[row] = r.version
-            row += 1
+        rows = slice(row, row + r.batch_size)
+        cols = (np.asarray(r.prompt_lengths, np.int64) - 1)[:, None] \
+            + np.arange(N)[None, :]
+        np.put_along_axis(behav[rows], cols,
+                          np.asarray(r.gen_logp, np.float32), axis=1)
+        np.put_along_axis(mask[rows], cols,
+                          np.asarray(r.gen_mask, np.float32), axis=1)
+        if per_token:
+            versions[rows] = r.version
+            if r.gen_versions is not None:
+                stamped = np.where(r.gen_mask > 0, r.gen_versions,
+                                   r.version).astype(np.int32)
+                np.put_along_axis(versions[rows], cols, stamped, axis=1)
+        else:
+            versions[rows] = r.version
+        row += r.batch_size
     return TrainBatch(
         tokens=jnp.asarray(tokens),
         response_mask=jnp.asarray(mask),
@@ -92,6 +109,16 @@ def assemble_train_batch(rollouts: List[RolloutBatch],
 
 
 # --------------------------------------------------------------------- score
+def _score_tokens(params, cfg: ModelConfig, tokens: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    tokens = constrain(tokens, "batch", None)
+    hidden, aux = M.forward_hidden(params, cfg, tokens[:, :-1])
+    w = output_head_weight(params["embedding"], cfg)
+    logp, entropy = token_logprob_entropy(hidden, w, tokens[:, 1:])
+    return (constrain(logp, "batch", None), constrain(entropy, "batch", None),
+            aux)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def score_tokens(params, cfg: ModelConfig, tokens: jax.Array
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -101,10 +128,7 @@ def score_tokens(params, cfg: ModelConfig, tokens: jax.Array
     materialize (this is exactly the computation the 'recompute' baseline
     pays for every training step).
     """
-    hidden, aux = M.forward_hidden(params, cfg, tokens[:, :-1])
-    w = output_head_weight(params["embedding"], cfg)
-    logp, entropy = token_logprob_entropy(hidden, w, tokens[:, 1:])
-    return logp, entropy, aux
+    return _score_tokens(params, cfg, tokens)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -113,102 +137,223 @@ def recompute_prox_logp(params, cfg: ModelConfig, tokens: jax.Array
     """The explicit proximal forward pass of decoupled PPO (Hilton 2022).
 
     This is the per-step cost A-3PO eliminates (paper Fig. 1)."""
-    logp, _, _ = score_tokens(params, cfg, tokens)
+    logp, _, _ = _score_tokens(params, cfg, tokens)
     return jax.lax.stop_gradient(logp)
 
 
-# ---------------------------------------------------------------------- loss
-def _loss_fn(params, cfg: ModelConfig, rl: RLConfig, method: str,
-             tokens, behav_logp, advantages, mask, versions,
-             current_version, prox_logp):
-    logp, entropy, aux = score_tokens.__wrapped__(params, cfg, tokens)
-    loss, metrics = policy_loss(
-        method, logp, behav_logp, advantages, mask, rl,
-        versions=versions, current_version=current_version,
-        recomputed_prox_logp=prox_logp, entropy=entropy)
-    return loss + aux, metrics
+# --------------------------------------------------------------- fused step
+# Fixed pack order for the on-device metrics vector — a single [K] f32
+# array is the step's one device->host transfer.
+METRIC_KEYS: Tuple[str, ...] = (
+    "clipped_frac", "clipped_tokens", "entropy", "grad_norm", "iw_max",
+    "iw_mean", "iw_min", "loss", "ratio_mean", "reward_mean",
+    "staleness_mean", "tokens",
+)
 
 
-# NOTE: params are NOT donated — the async runtime keeps older versions
-# alive as behavior policies; only the optimizer state is safe to donate.
-@functools.partial(jax.jit, static_argnames=("cfg", "rl", "method"),
-                   donate_argnums=(4,))
-def minibatch_update(cfg: ModelConfig, rl: RLConfig, method: str,
-                     params, opt, current_version,
-                     tokens, behav_logp, advantages, mask, versions,
-                     prox_logp):
-    (loss, metrics), grads = jax.value_and_grad(
-        _loss_fn, has_aux=True)(params, cfg, rl, method, tokens, behav_logp,
-                                advantages, mask, versions, current_version,
-                                prox_logp)
-    params, opt, gnorm = adam_update(grads, opt, params, rl)
-    metrics = dict(metrics, loss=loss, grad_norm=gnorm)
-    return params, opt, metrics
+def _reduce_metrics(stacked: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Fold [n]-stacked per-minibatch metrics: means, except extremes/sums
+    (exactly the seed loop-trainer's host-side aggregation, on device)."""
+    out = {k: jnp.mean(v, axis=0) for k, v in stacked.items()}
+    if "iw_max" in stacked:
+        out["iw_max"] = jnp.max(stacked["iw_max"], axis=0)
+    if "iw_min" in stacked:
+        out["iw_min"] = jnp.min(stacked["iw_min"], axis=0)
+    if "clipped_tokens" in stacked:
+        out["clipped_tokens"] = jnp.sum(stacked["clipped_tokens"], axis=0)
+    return out
+
+
+def _constrain_batch(t: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    return {k: constrain(v, *(("batch",) + (None,) * (v.ndim - 1)))
+            for k, v in t.items()}
+
+
+def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
+                     versions, rewards, prox_logp=None, *, cfg: ModelConfig,
+                     rl: RLConfig, method: str, num_minibatches: int,
+                     num_microbatches: int):
+    """One full training step, compiled: advantages -> scan over minibatch
+    updates (optionally gradient-accumulated over microbatches) -> packed
+    metrics. Exactly one output array carries every scalar metric."""
+    B = tokens.shape[0]
+    nmb = num_minibatches
+    mb_size = B // nmb
+    nmi = (num_microbatches
+           if num_microbatches > 1 and mb_size % num_microbatches == 0 else 1)
+
+    full = _constrain_batch(dict(tokens=tokens, behav_logp=behav_logp,
+                                 mask=mask, versions=versions,
+                                 rewards=rewards))
+    tokens, behav_logp, mask, versions, rewards = (
+        full["tokens"], full["behav_logp"], full["mask"], full["versions"],
+        full["rewards"])
+
+    adv_seq = group_normalized_advantages(rewards, rl.group_size)
+    advantages = adv_seq[:, None] * mask
+
+    # full-batch staleness/reward telemetry (matches the seed trainer)
+    d = version.astype(jnp.float32) - versions.astype(jnp.float32)
+    if versions.ndim == 2:
+        # per-token stamps: average over response tokens only (prompt
+        # positions carry a filler version, not behavior staleness)
+        staleness_mean = jnp.sum(d * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        staleness_mean = d.mean()
+
+    mbt = dict(tokens=tokens, behav_logp=behav_logp, advantages=advantages,
+               mask=mask, versions=versions)
+    if prox_logp is not None:
+        mbt["prox"] = prox_logp
+    # seed semantics: rows beyond nmb * mb_size are dropped from updates
+    # (but still count toward reward/staleness telemetry above)
+    mbt = jax.tree.map(
+        lambda x: x[: nmb * mb_size].reshape((nmb, mb_size) + x.shape[1:]),
+        mbt)
+
+    def loss_fn(p, t):
+        t = _constrain_batch(t)
+        logp, entropy, aux = _score_tokens(p, cfg, t["tokens"])
+        loss, metrics = policy_objective(
+            method, logp, t["behav_logp"], t["advantages"], t["mask"], rl,
+            versions=t["versions"], current_version=version,
+            recomputed_prox_logp=t.get("prox"), entropy=entropy)
+        return loss + aux, metrics
+
+    def grads_of(p, t):
+        if nmi == 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(p, t)
+        micro = jax.tree.map(
+            lambda x: x.reshape((nmi, mb_size // nmi) + x.shape[1:]), t)
+        g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+
+        # Accumulate weighted by each microbatch's response-token count:
+        # the losses are masked *means*, so an equal average would
+        # over-weight tokens in sparse microbatches relative to the
+        # single-pass minibatch objective.
+        def accum(carry, mi):
+            g_acc, loss_acc, w_acc = carry
+            w = jnp.sum(mi["mask"])
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, mi)
+            g_acc = jax.tree.map(
+                lambda a, g: a + w * g.astype(jnp.float32), g_acc, grads)
+            return (g_acc, loss_acc + w * loss, w_acc + w), metrics
+
+        (grads, loss, w_tot), ms = jax.lax.scan(
+            accum, (g0, jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.float32)), micro)
+        w_tot = jnp.maximum(w_tot, 1.0)
+        grads = jax.tree.map(lambda g: g / w_tot, grads)
+        return (loss / w_tot, _reduce_metrics(ms)), grads
+
+    def minibatch_body(carry, t):
+        p, o = carry
+        (loss, metrics), grads = grads_of(p, t)
+        p, o, gnorm = adam_update(grads, o, p, rl)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return (p, o), metrics
+
+    (params, opt), stacked = jax.lax.scan(minibatch_body, (params, opt), mbt)
+    out = _reduce_metrics(stacked)
+    out["reward_mean"] = rewards.mean()
+    out["staleness_mean"] = staleness_mean
+    # response tokens that actually received a gradient (rows past
+    # nmb * mb_size are dropped from the scan, so don't count them)
+    out["tokens"] = jnp.sum(mask[: nmb * mb_size])
+    assert set(out) == set(METRIC_KEYS), sorted(out)
+    packed = jnp.stack([out[k].astype(jnp.float32) for k in METRIC_KEYS])
+    return params, opt, packed
+
+
+_STEP_STATICS = ("cfg", "rl", "method", "num_minibatches", "num_microbatches")
+# Default engine donates only the optimizer state: the async runtime keeps
+# older params alive as behavior policies (WeightStore / staleness history),
+# so donating them would invalidate live behavior-policy buffers.
+_train_step = jax.jit(_train_step_impl, static_argnames=_STEP_STATICS,
+                      donate_argnums=(1,))
+# Opt-in variant for pure synchronous loops that never re-read old params:
+# donates params + opt, letting XLA update weights and moments in place.
+_train_step_donating = jax.jit(_train_step_impl,
+                               static_argnames=_STEP_STATICS,
+                               donate_argnums=(0, 1))
 
 
 # -------------------------------------------------------------------- driver
 class Trainer:
-    """One training engine. ``step`` = the paper's 'training step'."""
+    """One training engine. ``step`` = the paper's 'training step'.
+
+    ``num_microbatches`` > 1 adds gradient accumulation *inside* the
+    minibatch scan for batches that exceed memory. ``donate_params=True``
+    selects the params-donating compiled step (only safe when no other
+    component holds the previous weights)."""
 
     def __init__(self, cfg: ModelConfig, rl: Optional[RLConfig] = None,
-                 method: str = "loglinear"):
+                 method: str = "loglinear", *, num_microbatches: int = 1,
+                 donate_params: bool = False):
         assert method in ("loglinear", "recompute", "sync")
         self.cfg = cfg
         self.rl = rl or RLConfig()
         self.method = method
+        self.num_microbatches = num_microbatches
+        self.donate_params = donate_params
+        self.last_host_syncs = 0  # host transfers in the most recent step
 
     def init_state(self, key, dtype=None) -> TrainState:
+        """Initialize params + Adam moments, placed with the active
+        ``ShardingEnv``'s logical-axis rules when one is installed."""
         params = M.init_params(self.cfg, key, dtype=dtype)
-        return TrainState(params, adam_init(params),
-                          jnp.zeros((), jnp.int32))
+        opt = adam_init(params)
+        env = current_env()
+        if env is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            psh = M.param_shardings(self.cfg, env)
+            params = jax.device_put(params, psh)
+            opt = {
+                "m": jax.device_put(opt["m"], psh),
+                "v": jax.device_put(opt["v"], psh),
+                "t": jax.device_put(opt["t"],
+                                    NamedSharding(env.mesh, PartitionSpec())),
+            }
+        return TrainState(params, opt, jnp.zeros((), jnp.int32))
 
     def step(self, state: TrainState, batch: TrainBatch
              ) -> Tuple[TrainState, Dict[str, float]]:
         rl = self.rl
-        adv_seq = group_normalized_advantages(batch.rewards, rl.group_size)
-        advantages = adv_seq[:, None] * batch.response_mask
+        B = batch.tokens.shape[0]
+        nmb = min(rl.num_minibatches, B)
+        if self.num_microbatches > 1 \
+                and (B // nmb) % self.num_microbatches != 0:
+            raise ValueError(
+                f"num_microbatches={self.num_microbatches} does not divide "
+                f"the minibatch size {B // nmb} (B={B}, nmb={nmb}); the "
+                "memory-saving accumulation would be silently skipped")
+        host_syncs = 0
 
-        # --- explicit prox forward pass (recompute baseline only)
+        # --- explicit prox forward pass (recompute baseline only); for
+        # 'sync'/'loglinear' no prox operand enters the compiled step at all
         t0 = time.perf_counter()
+        prox = None
         if self.method == "recompute":
             prox = recompute_prox_logp(state.params, self.cfg, batch.tokens)
             prox.block_until_ready()
-        else:
-            prox = jnp.zeros_like(batch.behav_logp)  # unused placeholder
+            host_syncs += 1
         prox_time = time.perf_counter() - t0
 
-        params, opt = state.params, state.opt
-        B = batch.tokens.shape[0]
-        nmb = min(rl.num_minibatches, B)
-        mb = B // nmb
-        all_metrics: List[Dict[str, jax.Array]] = []
-        for i in range(nmb):
-            sl = slice(i * mb, (i + 1) * mb)
-            params, opt, metrics = minibatch_update(
-                self.cfg, rl, self.method, params, opt, state.version,
-                batch.tokens[sl], batch.behav_logp[sl], advantages[sl],
-                batch.response_mask[sl], batch.versions[sl], prox[sl])
-            all_metrics.append(metrics)
+        step_fn = _train_step_donating if self.donate_params else _train_step
+        params, opt, packed = step_fn(
+            state.params, state.opt, state.version, batch.tokens,
+            batch.behav_logp, batch.response_mask, batch.versions,
+            batch.rewards, prox, cfg=self.cfg, rl=rl, method=self.method,
+            num_minibatches=nmb, num_microbatches=self.num_microbatches)
 
-        out = {k: float(np.mean([float(m[k]) for m in all_metrics]))
-               for k in all_metrics[0]}
-        out["iw_max"] = float(np.max([float(m["iw_max"])
-                                      for m in all_metrics]))
-        out["iw_min"] = float(np.min([float(m["iw_min"])
-                                      for m in all_metrics]))
-        out["clipped_tokens"] = float(np.sum([float(m["clipped_tokens"])
-                                              for m in all_metrics]))
+        # the single device->host transfer of the step
+        values = jax.device_get(packed)
+        host_syncs += 1
+        out = {k: float(v) for k, v in zip(METRIC_KEYS, values)}
         out["prox_time_s"] = prox_time
-        out["reward_mean"] = float(batch.rewards.mean())
-        d = state.version - batch.versions
-        if batch.versions.ndim == 2:
-            # per-token stamps: average over response tokens only (prompt
-            # positions carry a filler version, not behavior staleness)
-            msum = float(jnp.sum(batch.response_mask))
-            out["staleness_mean"] = float(
-                jnp.sum(d * batch.response_mask) / max(msum, 1.0))
-        else:
-            out["staleness_mean"] = float(d.mean())
+        out["host_syncs"] = float(host_syncs)
+        self.last_host_syncs = host_syncs
         new_state = TrainState(params, opt, state.version + 1)
         return new_state, out
 
@@ -219,7 +364,7 @@ def sft_update(cfg: ModelConfig, params, opt, tokens, mask, lr: float = 1e-3):
     rl = RLConfig(learning_rate=lr, max_grad_norm=1.0)
 
     def loss_fn(p):
-        logp, _, aux = score_tokens.__wrapped__(p, cfg, tokens)
+        logp, _, aux = _score_tokens(p, cfg, tokens)
         ce = -jnp.sum(logp * mask) / jnp.maximum(jnp.sum(mask), 1.0)
         return ce + aux
 

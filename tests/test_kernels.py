@@ -138,11 +138,14 @@ def test_a3po_loss_kernel_vs_ref(T):
     adv = jax.random.normal(jax.random.PRNGKey(8), (T,))
     mask = (jax.random.uniform(jax.random.PRNGKey(9), (T,)) > 0.3
             ).astype(jnp.float32)
-    l_k, c_k = a3po_loss_pallas(lp, bl, al, adv, mask, bt=128,
-                                interpret=True)
-    l_r, c_r = a3po_loss_ref(lp, bl, al, adv, mask, clip_eps=0.2, iw_cap=5.0)
+    l_k, c_k, iw_k, r_k = a3po_loss_pallas(lp, bl, al, adv, mask, bt=128,
+                                           interpret=True)
+    l_r, c_r, iw_r, r_r = a3po_loss_ref(lp, bl, al, adv, mask, clip_eps=0.2,
+                                        iw_cap=5.0)
     np.testing.assert_allclose(l_k, l_r, rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(c_k, c_r)
+    np.testing.assert_allclose(iw_k, iw_r, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(r_k, r_r, rtol=2e-5, atol=2e-5)
 
 
 def test_a3po_fused_matches_modular_loss():
@@ -165,13 +168,14 @@ def test_a3po_fused_matches_modular_loss():
     from repro.core.a3po import alpha_from_staleness, staleness
     alpha = jnp.broadcast_to(
         alpha_from_staleness(staleness(versions, 3), cfg)[:, None], (B, T))
-    l_tok, clip_tok = a3po_loss_pallas(
+    l_tok, clip_tok, iw_tok, _ = a3po_loss_pallas(
         logp.reshape(-1), behav.reshape(-1), alpha.reshape(-1),
         adv.reshape(-1), mask.reshape(-1), clip_eps=cfg.clip_eps,
         iw_cap=cfg.behav_weight_cap, interpret=True)
     np.testing.assert_allclose(l_tok.sum() / mask.sum(), l_mod,
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(clip_tok.sum(), m["clipped_tokens"])
+    np.testing.assert_allclose(iw_tok.max(), m["iw_max"], rtol=1e-6)
 
 
 # --------------------------------------------------------------- decode attn
