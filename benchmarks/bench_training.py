@@ -1,8 +1,9 @@
 """Paper Table 1 + Figs 2-6: end-to-end RL training comparison.
 
-Runs the three methods (sync GRPO / recompute / loglinear A-3PO) on the
-synthetic arithmetic task with an SFT-warmed toy model, at matched training
-epochs, and reports:
+Runs every benchmarked Algorithm-registry entry (the paper's sync GRPO /
+recompute / a3po plus the beyond-paper asympo and grpo_mu) on the
+synthetic arithmetic task with an SFT-warmed toy model, at matched
+training epochs, and reports:
 
   * final train/eval reward            (Table 1, Fig 2-3)
   * wall-clock per step + prox time    (Table 1, Fig 1)
@@ -27,6 +28,7 @@ import numpy as np
 
 from benchmarks.common import CsvOut, toy_config
 from repro.configs.base import RLConfig
+from repro.core.algorithms import BUILTINS, get_algorithm
 from repro.async_rl.orchestrator import simulate_async
 from repro.data.tasks import ArithmeticTask
 from repro.rollout.engine import RolloutEngine
@@ -65,7 +67,10 @@ def eval_reward(cfg, params, task: ArithmeticTask, n: int = 64,
 
 
 def run(csv: CsvOut, num_steps: int = 30, seed: int = 0,
-        sft_steps: int = 150) -> Dict[str, dict]:
+        sft_steps: int = 150, save_json: bool = True) -> Dict[str, dict]:
+    """``save_json=False`` (CI --quick smoke) skips the
+    experiments/training_<algo>.json dumps so throwaway short runs never
+    clobber the committed paper-figure data."""
     cfg = toy_config("toy-2m")
     task = ArithmeticTask(max_operand=9, n_terms=2, prompt_len=8, seed=seed)
     rl = RLConfig(group_size=4, num_minibatches=2, learning_rate=2e-4,
@@ -77,13 +82,15 @@ def run(csv: CsvOut, num_steps: int = 30, seed: int = 0,
             f"reward={base_eval:.3f} sft_loss={sft_loss:.3f}")
 
     results: Dict[str, dict] = {}
-    for method in ("sync", "recompute", "loglinear"):
-        staleness = 0 if method == "sync" else 2
-        trainer = Trainer(cfg, rl, method)
+    # one row per built-in Algorithm-registry entry (incl. the
+    # beyond-paper asympo / grpo_mu plugins)
+    for name in BUILTINS:
+        algo = get_algorithm(name)
+        staleness = 0 if algo.on_policy else 2
         state = TrainState(base_params, adam_init(base_params),
                            jax.numpy.zeros((), jax.numpy.int32))
         state, recs = simulate_async(
-            cfg, rl, task, method, num_steps=num_steps, n_prompts=8,
+            cfg, rl, task, algo, num_steps=num_steps, n_prompts=8,
             max_new_tokens=6, staleness=staleness, seed=seed,
             init_state=state)
         final_eval = eval_reward(cfg, state.params, task)
@@ -98,7 +105,7 @@ def run(csv: CsvOut, num_steps: int = 30, seed: int = 0,
         overlap_time = float(np.sum(np.maximum(rollout_t, train_t)))
 
         res = {
-            "method": method,
+            "algo": name,
             "staleness": staleness,
             "steps": num_steps,
             "final_train_reward": float(np.mean(
@@ -122,26 +129,27 @@ def run(csv: CsvOut, num_steps: int = 30, seed: int = 0,
             "clipped_tokens": [r.clipped_tokens for r in recs],
             "reward_curve": [r.reward for r in recs],
         }
-        results[method] = res
-        os.makedirs(EXP_DIR, exist_ok=True)
-        with open(os.path.join(EXP_DIR, f"training_{method}.json"),
-                  "w") as f:
-            json.dump(res, f, indent=2)
-        csv.add(f"table1/{method}/step_time", res["mean_step_time_s"],
+        results[name] = res
+        if save_json:
+            os.makedirs(EXP_DIR, exist_ok=True)
+            with open(os.path.join(EXP_DIR, f"training_{name}.json"),
+                      "w") as f:
+                json.dump(res, f, indent=2)
+        csv.add(f"table1/{name}/step_time", res["mean_step_time_s"],
                 f"eval_reward={final_eval:.3f} "
                 f"prox_t={res['mean_prox_time_s']*1e3:.2f}ms "
                 f"clip_tok={np.mean(res['clipped_tokens']):.1f}")
-        csv.add(f"table1/{method}/train_throughput",
+        csv.add(f"table1/{name}/train_throughput",
                 res["mean_train_time_s"],
                 f"tokens_per_s={res['train_tokens_per_s']:.0f} "
                 f"host_syncs_per_step={res['host_syncs_per_step']:.1f}")
 
-    # paper-style derived comparisons
-    if all(m in results for m in ("sync", "recompute", "loglinear")):
+    # paper-style derived comparisons (a3po == the paper's loglinear)
+    if all(m in results for m in ("sync", "recompute", "a3po")):
         t_sync = results["sync"]["seq_wall_time_s"]
         # async methods overlap rollout & training (schedule model)
         t_rec = results["recompute"]["overlap_wall_time_s"]
-        t_ll = results["loglinear"]["overlap_wall_time_s"]
+        t_ll = results["a3po"]["overlap_wall_time_s"]
         csv.add("table1/speedup_loglinear_vs_sync", 0.0,
                 f"{t_sync / t_ll:.2f}x (paper: 1.5-1.8x)")
         csv.add("table1/speedup_loglinear_vs_recompute", 0.0,
@@ -149,12 +157,12 @@ def run(csv: CsvOut, num_steps: int = 30, seed: int = 0,
         csv.add("fig5/iw_max", 0.0,
                 "loglinear={:.2f} recompute={:.2f} (loglinear more "
                 "controlled)".format(
-                    float(np.max(results["loglinear"]["iw_max"])),
+                    float(np.max(results["a3po"]["iw_max"])),
                     float(np.max(results["recompute"]["iw_max"]))))
         csv.add("fig6/clipped_tokens_mean", 0.0,
                 "loglinear={:.1f} recompute={:.1f} sync={:.1f}".format(
                     *[float(np.mean(results[m]["clipped_tokens"]))
-                      for m in ("loglinear", "recompute", "sync")]))
+                      for m in ("a3po", "recompute", "sync")]))
     return results
 
 

@@ -55,8 +55,9 @@ def main() -> None:
     section("kernels", lambda: bench_kernels.run(csv), skip_quick=True)
     section("roofline", lambda: bench_roofline.run(csv), skip_quick=True)
     section("prefix", lambda: bench_prefix_cache.run(csv), skip_quick=True)
-    section("table1", lambda: bench_training.run(csv, num_steps=steps,
-                                                 sft_steps=sft_steps))
+    section("table1", lambda: bench_training.run(
+        csv, num_steps=steps, sft_steps=sft_steps,
+        save_json=not args.quick))
 
     if failures:
         print(f"# FAILED sections: {failures}", file=sys.stderr)

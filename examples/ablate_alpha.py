@@ -2,7 +2,9 @@
 
 The paper fixes alpha = 1/d. We compare: inverse (paper), exp (gamma^d),
 clipped inverse, and const — same SFT base, same data order — and report
-final eval reward + stability stats for each.
+final eval reward + stability stats for each. Each variant is just the
+``A3PO`` Algorithm with a different nested ``schedule`` override — the
+registry API makes an ablation a list of frozen Algorithm instances.
 
 Run: PYTHONPATH=src python examples/ablate_alpha.py [--steps 25]
 """
@@ -16,6 +18,7 @@ import numpy as np
 
 from repro.configs.base import RLConfig
 from repro.configs.registry import get_config
+from repro.core.algorithms import A3PO
 from repro.async_rl.orchestrator import simulate_async
 from repro.data.tasks import ArithmeticTask
 from repro.training.optimizer import adam_init
@@ -37,12 +40,15 @@ def main() -> None:
 
     results = {}
     for schedule in ("inverse", "exp", "clipped", "const"):
-        rl = RLConfig(group_size=4, num_minibatches=2, learning_rate=2e-4,
-                      alpha_schedule=schedule)
+        # per-algorithm nested config: the schedule override lives on the
+        # frozen A3PO instance, not in a parallel RLConfig field
+        algo = A3PO(schedule=schedule)
+        rl = RLConfig(algo=algo, group_size=4, num_minibatches=2,
+                      learning_rate=2e-4)
         state = TrainState(base_params, adam_init(base_params),
                            jax.numpy.zeros((), jax.numpy.int32))
         state, recs = simulate_async(
-            cfg, rl, task, "loglinear", args.steps, n_prompts=8,
+            cfg, rl, task, algo, args.steps, n_prompts=8,
             max_new_tokens=6, staleness=args.staleness, seed=0,
             init_state=state)
         final = eval_reward(cfg, state.params, task)

@@ -1,8 +1,9 @@
-"""Quickstart: the A-3PO approximation in 30 lines.
+"""Quickstart: the A-3PO approximation + the Algorithm API in ~40 lines.
 
 Shows the paper's core idea standalone — approximate the proximal policy by
-staleness-aware log-linear interpolation instead of a forward pass — and
-plugs it into the decoupled PPO loss.
+staleness-aware log-linear interpolation instead of a forward pass — then
+runs the same data through pluggable Algorithm objects from the registry
+(the A-3PO built-in routes through the fused kernel path).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import RLConfig
 from repro.core.a3po import compute_prox_logp_approximation
-from repro.core.losses import policy_loss
+from repro.core.algorithms import LossInputs, available, get_algorithm
 
 B, T = 4, 16
 key = jax.random.PRNGKey(0)
@@ -33,13 +34,24 @@ print("prox sandwiched between behav/target:",
       bool(jnp.all((prox_logp >= jnp.minimum(behav_logp, logp) - 1e-6)
                    & (prox_logp <= jnp.maximum(behav_logp, logp) + 1e-6))))
 
-# --- full decoupled objective (Eq. 2) with the approximated anchor --------
+# --- the Algorithm registry: every objective is a pluggable object --------
+print("registered algorithms:", available())
 advantages = jax.random.normal(jax.random.PRNGKey(2), (B, T))
 mask = jnp.ones((B, T))
-loss, metrics = policy_loss(
-    "loglinear", logp, behav_logp, advantages, mask, rl,
-    versions=versions, current_version=current_version)
+batch = LossInputs(advantages=advantages, mask=mask, behav_logp=behav_logp,
+                   versions=versions, current_version=current_version)
+
+algo = get_algorithm("a3po")  # fused-kernel A-3PO (alias: "loglinear")
+loss, metrics = algo.loss(logp, batch, rl)
 print(f"A-3PO loss: {float(loss):+.4f}  "
       f"iw in [{float(metrics['iw_min']):.3f}, "
       f"{float(metrics['iw_max']):.3f}]  "
-      f"clipped: {int(metrics['clipped_tokens'])} tokens")
+      f"clipped: {int(metrics['clipped_tokens'])} tokens  "
+      f"kl: {float(metrics['kl']):+.4f}")
+
+# swapping the algorithm is one registry lookup — asympo needs no
+# behavior logps at all (see `launch/train.py --algo list` for flags)
+asympo = get_algorithm("asympo")
+loss2, m2 = asympo.loss(
+    logp, LossInputs(advantages=advantages, mask=mask), rl)
+print(f"ASymPO loss (behavior-free): {float(loss2):+.4f}")

@@ -4,12 +4,13 @@ Pipeline (mirrors the paper's setup at toy scale):
   1. SFT-warm a ~2M/20M-param decoder on the synthetic arithmetic task
      (the stand-in for an instruct base model).
   2. Run async RL — rollout engine + trainer decoupled, behavior policy
-     lagging `--staleness` versions — with the chosen method.
+     lagging `--staleness` versions — with the chosen algorithm (any
+     registry name: a3po / recompute / sync / asympo / grpo_mu / ...).
   3. Report reward curves, prox-computation time, stability stats, and a
      held-out greedy eval. Checkpoints saved under experiments/ckpt/.
 
 Run: PYTHONPATH=src python examples/train_async_rl.py \
-       --method loglinear --steps 40 [--model toy-20m] [--threaded]
+       --algo a3po --steps 40 [--model toy-20m] [--threaded]
 """
 import argparse
 import dataclasses
@@ -21,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import RLConfig
 from repro.configs.registry import get_config
+from repro.core.algorithms import resolve_algorithm
 from repro.async_rl.orchestrator import AsyncOrchestrator, simulate_async
 from repro.data.tasks import ArithmeticTask
 from repro.training.checkpoints import save_checkpoint
@@ -31,8 +33,8 @@ from benchmarks.bench_training import eval_reward, sft_warmup
 
 def main() -> None:
     p = argparse.ArgumentParser()
-    p.add_argument("--method", default="loglinear",
-                   choices=["loglinear", "recompute", "sync"])
+    p.add_argument("--algo", default="a3po",
+                   help="policy-optimization algorithm (registry name)")
     p.add_argument("--model", default="toy-2m")
     p.add_argument("--steps", type=int, default=40)
     p.add_argument("--staleness", type=int, default=2)
@@ -44,8 +46,10 @@ def main() -> None:
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
+    algo = resolve_algorithm(args.algo)
     cfg = dataclasses.replace(get_config(args.model), dtype="float32")
-    rl = RLConfig(group_size=4, num_minibatches=2, learning_rate=2e-4)
+    rl = RLConfig(algo=algo, group_size=4, num_minibatches=2,
+                  learning_rate=2e-4)
     task = ArithmeticTask(max_operand=9, n_terms=2, prompt_len=8,
                           seed=args.seed)
 
@@ -57,15 +61,15 @@ def main() -> None:
 
     state = TrainState(params, adam_init(params),
                        jax.numpy.zeros((), jax.numpy.int32))
-    print(f"== async RL: method={args.method} staleness={args.staleness} ==")
+    print(f"== async RL: algo={algo.name} staleness={args.staleness} ==")
     if args.threaded:
-        orch = AsyncOrchestrator(cfg, rl, task, args.method,
+        orch = AsyncOrchestrator(cfg, rl, task, algo,
                                  n_prompts=args.prompts, max_new_tokens=6)
         state, recs = orch.run(state, args.steps)
     else:
-        staleness = 0 if args.method == "sync" else args.staleness
+        staleness = 0 if algo.on_policy else args.staleness
         state, recs = simulate_async(
-            cfg, rl, task, args.method, args.steps, n_prompts=args.prompts,
+            cfg, rl, task, algo, args.steps, n_prompts=args.prompts,
             max_new_tokens=6, staleness=staleness, seed=args.seed,
             init_state=state, eval_every=10,
             eval_fn=lambda p: eval_reward(cfg, p, task, n=32))
@@ -80,12 +84,12 @@ def main() -> None:
 
     final = eval_reward(cfg, state.params, task)
     print(f"final eval reward: {final:.3f} (base {base:.3f})")
-    out = os.path.join("experiments", "ckpt", f"{args.model}_{args.method}")
+    out = os.path.join("experiments", "ckpt", f"{args.model}_{algo.name}")
     save_checkpoint(out, {"params": state.params},
-                    {"method": args.method, "steps": args.steps,
+                    {"algo": algo.name, "steps": args.steps,
                      "final_eval_reward": final})
     print(f"checkpoint: {out}.npz")
-    summary = {"method": args.method, "base_eval": base, "final_eval": final,
+    summary = {"algo": algo.name, "base_eval": base, "final_eval": final,
                "mean_prox_ms": float(np.mean(
                    [r.prox_time_s for r in recs[1:]])) * 1e3}
     print(json.dumps(summary))

@@ -73,18 +73,23 @@ def _rollout_once(engine: RolloutEngine, task: ArithmeticTask,
 
 
 class AsyncOrchestrator:
-    """Thread-decoupled rollout/training loop."""
+    """Thread-decoupled rollout/training loop.
+
+    ``algo`` is an ``Algorithm`` instance or registry name
+    (``core.algorithms``); dispatch is entirely the Trainer's — the
+    orchestrator never branches on it."""
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
-                 method: str = "loglinear", n_prompts: int = 16,
+                 algo="a3po", n_prompts: int = 16,
                  max_new_tokens: int = 8, queue_capacity: int = 4,
                  seed: int = 0, use_control_plane: bool = False,
                  serve_kwargs: Optional[Dict] = None):
-        self.cfg, self.rl, self.task, self.method = cfg, rl, task, method
+        self.cfg, self.rl, self.task = cfg, rl, task
         self.n_prompts = n_prompts
         self.max_new_tokens = max_new_tokens
         self.engine = RolloutEngine(cfg, rl, max_new_tokens)
-        self.trainer = Trainer(cfg, rl, method)
+        self.trainer = Trainer(cfg, rl, algo)
+        self.algo = self.trainer.algo
         self.queue = RolloutQueue(queue_capacity, rl.max_staleness)
         self.seed = seed
         self._stop = threading.Event()
@@ -181,7 +186,7 @@ class AsyncOrchestrator:
 
 
 def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
-                   method: str, num_steps: int, *,
+                   algo, num_steps: int, *,
                    n_prompts: int = 8, max_new_tokens: int = 8,
                    staleness: int = 1, seed: int = 0,
                    init_state: Optional[TrainState] = None,
@@ -191,11 +196,12 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
                    num_microbatches: int = 1,
                    ) -> (TrainState, List[StepRecord]):
     """Deterministic async simulation: behavior policy lags ``staleness``
-    versions behind (0 == synchronous on-policy). ``eval_fn(params)`` is
-    invoked every ``eval_every`` steps (the paper's held-out eval worker,
-    Fig. 3); results land in ``StepRecord.eval_reward``."""
+    versions behind (0 == synchronous on-policy). ``algo`` is an
+    ``Algorithm`` or registry name. ``eval_fn(params)`` is invoked every
+    ``eval_every`` steps (the paper's held-out eval worker, Fig. 3);
+    results land in ``StepRecord.eval_reward``."""
     engine = RolloutEngine(cfg, rl, max_new_tokens)
-    trainer = Trainer(cfg, rl, method, num_microbatches=num_microbatches)
+    trainer = Trainer(cfg, rl, algo, num_microbatches=num_microbatches)
     key = jax.random.PRNGKey(seed)
     state = init_state or trainer.init_state(jax.random.PRNGKey(seed + 7))
     history: deque = deque(maxlen=staleness + 1)

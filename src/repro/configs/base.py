@@ -208,10 +208,28 @@ SHAPES = {
 
 
 @dataclass(frozen=True)
-class RLConfig:
-    """A-3PO / decoupled-PPO algorithm settings (paper §4.1 defaults)."""
+class AlgoConfig:
+    """Base for per-algorithm hyperparameter blocks.
 
-    method: str = "loglinear"  # loglinear (A-3PO) | recompute | sync
+    Frozen (hashable) so an algorithm rides into jit static args together
+    with ``RLConfig``. Concrete policy-optimization algorithms subclass
+    this in ``repro.core.algorithms`` and add behavior (loss, hooks) on
+    top of their hyperparameter fields; ``RLConfig.algo`` nests one.
+    """
+
+
+@dataclass(frozen=True)
+class RLConfig:
+    """A-3PO / decoupled-PPO algorithm settings (paper §4.1 defaults).
+
+    Algorithm selection lives in ``algo`` (an ``Algorithm`` instance from
+    ``repro.core.algorithms``); the stringly-typed ``method`` field is the
+    deprecated pre-registry spelling, kept as a fallback the registry shim
+    resolves (``resolve_algorithm``).
+    """
+
+    algo: Optional[AlgoConfig] = None  # nested per-algorithm config
+    method: str = "loglinear"  # DEPRECATED: a3po/loglinear | recompute | sync
     alpha_schedule: str = "inverse"  # inverse (paper 1/d) | exp | clipped | const
     alpha_const: float = 0.5
     alpha_gamma: float = 0.5  # for exp schedule: alpha = gamma ** d
@@ -220,6 +238,9 @@ class RLConfig:
     # behavior-weight clipping used by decoupled losses to bound pi_prox/pi_b
     behav_weight_cap: float = 5.0
     entropy_coef: float = 0.0
+    # weight of the k1 KL(pi_theta || anchor) penalty added to every
+    # algorithm's loss (the anchor is each algorithm's trust-region
+    # reference: behavior, recomputed prox, or the log-linear prox)
     kl_coef: float = 0.0
     group_size: int = 4  # samples per prompt (group reward normalization)
     num_minibatches: int = 4  # gradient updates per training step

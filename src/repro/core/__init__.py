@@ -19,3 +19,12 @@ from repro.core.losses import (  # noqa: F401
     decoupled_ppo_loss,
     policy_loss,
 )
+from repro.core.algorithms import (  # noqa: F401
+    Algorithm,
+    LossInputs,
+    available,
+    get_algorithm,
+    register,
+    registry_table,
+    resolve_algorithm,
+)

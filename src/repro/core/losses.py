@@ -1,10 +1,12 @@
-"""Thin compatibility layer over ``core.objective``.
+"""Thin compatibility layer over ``core.objective`` / ``core.algorithms``.
 
 The policy-gradient objectives (coupled PPO/GRPO, decoupled PPO, fused
-A-3PO) live in ``repro.core.objective`` — the unified, kernel-backed
-interface the training engine scans over. This module keeps the original
-import surface (``policy_loss`` and the two modular losses) stable for
-older call sites and tests.
+A-3PO, and the registry-pluggable algorithms) live in
+``repro.core.objective`` and ``repro.core.algorithms``. This module keeps
+the original import surface (``policy_loss`` and the two modular losses)
+stable for older call sites and tests; stringly-typed ``method`` dispatch
+through it resolves via the Algorithm registry and emits a
+``DeprecationWarning``.
 """
 from __future__ import annotations
 
@@ -13,6 +15,12 @@ from typing import Dict, Optional, Tuple
 import jax
 
 from repro.configs.base import RLConfig
+from repro.core.algorithms import (  # noqa: F401
+    Algorithm,
+    LossInputs,
+    get_algorithm,
+    resolve_algorithm,
+)
 from repro.core.objective import (  # noqa: F401
     Metrics,
     coupled_ppo_loss,
@@ -22,7 +30,7 @@ from repro.core.objective import (  # noqa: F401
 
 
 def policy_loss(
-    method: str,
+    method,
     logp: jax.Array,
     behav_logp: jax.Array,
     advantages: jax.Array,
@@ -34,9 +42,9 @@ def policy_loss(
     recomputed_prox_logp: Optional[jax.Array] = None,
     entropy: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Dispatch: 'sync' (coupled), 'recompute' (decoupled, explicit prox),
-    'loglinear' (A-3PO, fused kernel). Delegates to
-    ``objective.policy_objective``."""
+    """Legacy dispatch: ``method`` may be an ``Algorithm`` or a registry
+    name ('sync' / 'recompute' / 'a3po' aka 'loglinear' / ...). Delegates
+    to ``objective.policy_objective`` (names warn, then resolve)."""
     return policy_objective(
         method, logp, behav_logp, advantages, mask, cfg,
         versions=versions, current_version=current_version,

@@ -60,6 +60,11 @@ def _clip_objective(ratio: jax.Array, adv: jax.Array, eps: float
     return obj, was_clipped
 
 
+# public names for Algorithm plugins (core.algorithms and third parties)
+masked_mean = _masked_mean
+clip_objective = _clip_objective
+
+
 def _common_metrics(iw, ratio, was_clipped, mask, entropy) -> Metrics:
     m: Metrics = {
         "iw_max": _masked_max(iw, mask),
@@ -72,6 +77,32 @@ def _common_metrics(iw, ratio, was_clipped, mask, entropy) -> Metrics:
     if entropy is not None:
         m["entropy"] = _masked_mean(entropy, mask)
     return m
+
+
+common_metrics = _common_metrics
+
+
+def apply_regularizers(loss: jax.Array, metrics: Metrics, logp: jax.Array,
+                       anchor_logp: jax.Array, mask: jax.Array,
+                       cfg: RLConfig, entropy: Optional[jax.Array]
+                       ) -> Tuple[jax.Array, Metrics]:
+    """Shared loss tail for every algorithm: KL penalty + entropy bonus.
+
+    ``kl`` is the k1 estimator of KL(pi_theta || anchor) on the response
+    tokens — the anchor is whatever trust-region reference the algorithm
+    uses (behavior, recomputed prox, log-linear prox). It is always
+    reported in ``metrics`` and added to the loss when ``cfg.kl_coef`` is
+    set (this is the wiring of the previously-dead ``RLConfig.kl_coef``).
+    """
+    kl = _masked_mean(
+        logp.astype(jnp.float32)
+        - jax.lax.stop_gradient(anchor_logp.astype(jnp.float32)), mask)
+    metrics["kl"] = kl
+    if cfg.kl_coef:
+        loss = loss + cfg.kl_coef * kl
+    if entropy is not None and cfg.entropy_coef:
+        loss = loss - cfg.entropy_coef * metrics["entropy"]
+    return loss, metrics
 
 
 # ------------------------------------------------------------- alpha dispatch
@@ -119,9 +150,8 @@ def coupled_ppo_loss(
     obj, was_clipped = _clip_objective(ratio, advantages, cfg.clip_eps)
     loss = -_masked_mean(obj, mask)
     metrics = _common_metrics(ratio, ratio, was_clipped, mask, entropy)
-    if entropy is not None and cfg.entropy_coef:
-        loss = loss - cfg.entropy_coef * _masked_mean(entropy, mask)
-    return loss, metrics
+    return apply_regularizers(loss, metrics, logp, behav_logp, mask, cfg,
+                              entropy)
 
 
 def decoupled_ppo_loss(
@@ -146,9 +176,8 @@ def decoupled_ppo_loss(
     obj, was_clipped = _clip_objective(ratio, advantages, cfg.clip_eps)
     loss = -_masked_mean(iw * obj, mask)
     metrics = _common_metrics(iw, ratio, was_clipped, mask, entropy)
-    if entropy is not None and cfg.entropy_coef:
-        loss = loss - cfg.entropy_coef * _masked_mean(entropy, mask)
-    return loss, metrics
+    return apply_regularizers(loss, metrics, logp, prox_logp, mask, cfg,
+                              entropy)
 
 
 # ----------------------------------------------------------------- fused path
@@ -189,40 +218,57 @@ def fused_a3po_loss(
     }
     if entropy is not None:
         metrics["entropy"] = _masked_mean(entropy, mask)
-        if cfg.entropy_coef:
-            loss = loss - cfg.entropy_coef * metrics["entropy"]
-    return loss, metrics
+    # the log-linear anchor, reconstructed for the shared KL path (the
+    # fused kernel keeps it internal)
+    anchor = alpha * behav_logp + (1.0 - alpha) * logp
+    return apply_regularizers(loss, metrics, logp, anchor, mask, cfg,
+                              entropy)
 
 
 # ------------------------------------------------------------------- dispatch
 def policy_objective(
-    method: str,
-    logp: jax.Array,
-    behav_logp: jax.Array,
-    advantages: jax.Array,
-    mask: jax.Array,
-    cfg: RLConfig,
+    algo=None,
+    logp: Optional[jax.Array] = None,
+    behav_logp: Optional[jax.Array] = None,
+    advantages: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+    cfg: Optional[RLConfig] = None,
     *,
     versions: Optional[jax.Array] = None,
     current_version=None,
     recomputed_prox_logp: Optional[jax.Array] = None,
     entropy: Optional[jax.Array] = None,
+    method: Optional[str] = None,
 ) -> Tuple[jax.Array, Metrics]:
-    """Unified objective: 'sync' (coupled), 'recompute' (decoupled with the
-    explicit prox forward pass), 'loglinear' (A-3PO through the fused
-    kernel, alpha resolved from version stamps or the KL controller)."""
-    if method == "sync":
-        return coupled_ppo_loss(logp, behav_logp, advantages, mask, cfg,
-                                entropy)
-    if method == "recompute":
-        assert recomputed_prox_logp is not None, \
-            "recompute method needs the explicit prox forward pass"
-        return decoupled_ppo_loss(logp, behav_logp, recomputed_prox_logp,
-                                  advantages, mask, cfg, entropy)
-    if method == "loglinear":
-        alpha = resolve_alpha(cfg, versions=versions,
-                              current_version=current_version,
-                              logp=logp, behav_logp=behav_logp, mask=mask)
-        return fused_a3po_loss(logp, behav_logp, alpha, advantages, mask,
-                               cfg, entropy)
-    raise ValueError(f"unknown method {method!r}")
+    """Unified objective, dispatched through the Algorithm registry.
+
+    ``algo`` is an ``Algorithm`` instance (``repro.core.algorithms``) or a
+    registry name. Stringly-typed dispatch — a name positionally or the
+    legacy ``method=`` keyword — still resolves through the registry but
+    emits a ``DeprecationWarning``; new call sites should pass
+    ``get_algorithm("a3po")`` (or any registered Algorithm) directly.
+    """
+    import warnings
+
+    from repro.core.algorithms import Algorithm, LossInputs, get_algorithm
+
+    if method is not None:
+        warnings.warn(
+            "policy_objective(method=...) is deprecated; pass an Algorithm "
+            "from repro.core.algorithms (e.g. get_algorithm('a3po'))",
+            DeprecationWarning, stacklevel=2)
+        if algo is None:
+            algo = method
+    if isinstance(algo, str):
+        if method is None:
+            warnings.warn(
+                f"stringly-typed policy_objective({algo!r}, ...) is "
+                "deprecated; pass an Algorithm from repro.core.algorithms",
+                DeprecationWarning, stacklevel=2)
+        algo = get_algorithm(algo)
+    assert isinstance(algo, Algorithm), algo
+    batch = LossInputs(
+        behav_logp=behav_logp, advantages=advantages, mask=mask,
+        versions=versions, current_version=current_version,
+        prox_logp=recomputed_prox_logp, entropy=entropy)
+    return algo.loss(logp, batch, cfg or RLConfig())

@@ -46,16 +46,18 @@ def _mem_dict(mem) -> dict:
 
 
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-               method: str = "loglinear", fsdp: bool = True,
+               algo="a3po", fsdp: bool = True,
                save: bool = True, verbose: bool = True,
                rules=None, hoist_gather: bool = False,
                kv_seq_shard: bool = False, zero1: bool = False,
                tp_fallback: bool = False, ep_moe: bool = False,
                num_microbatches: int = 8, prefill_microbatches: int = 1,
                tag_suffix: str = "") -> dict:
+    from repro.core.algorithms import resolve_algorithm
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     rl = RLConfig()
+    algo = resolve_algorithm(algo, rl)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     if kv_seq_shard:
@@ -73,13 +75,13 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     specs = steps.input_specs(cfg, shape)
     if shape.kind == "train":
-        step = steps.make_train_step(cfg, rl, method,
+        step = steps.make_train_step(cfg, rl, algo,
                                      num_microbatches=num_microbatches,
                                      hoist_fsdp_gather=hoist_gather)
     elif shape.kind == "prefill" and prefill_microbatches > 1:
         step = steps.make_prefill_step(cfg, shape, prefill_microbatches)
     else:
-        step = steps.make_step(cfg, shape, rl, method)
+        step = steps.make_step(cfg, shape, rl, algo)
     params_abs = M.abstract_params(cfg)
     param_sh = M.param_shardings(cfg, env)
     batch_sh = steps.batch_shardings(cfg, shape, env, specs)
@@ -139,7 +141,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_chips": n_chips,
         "kind": shape.kind,
-        "method": method,
+        "algo": algo.name,
         "fsdp": fsdp,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
@@ -186,7 +188,11 @@ def main() -> None:
     p.add_argument("--multi-pod", action="store_true")
     p.add_argument("--all", action="store_true",
                    help="run every assigned arch x shape")
-    p.add_argument("--method", default="loglinear")
+    p.add_argument("--algo", default=None,
+                   help="policy-optimization algorithm (registry name, "
+                        "default a3po)")
+    p.add_argument("--method", default=None,
+                   help="DEPRECATED alias for --algo")
     p.add_argument("--no-fsdp", action="store_true")
     # §Perf optimization levers (see EXPERIMENTS.md §4)
     p.add_argument("--ep-moe", action="store_true",
@@ -199,6 +205,10 @@ def main() -> None:
                    help="hoist FSDP weight all-gather out of microbatches")
     p.add_argument("--tag", default="", help="suffix for result files")
     args = p.parse_args()
+    if args.method:
+        import warnings
+        warnings.warn("--method is deprecated; use --algo",
+                      DeprecationWarning)
 
     combos = []
     if args.all:
@@ -213,7 +223,8 @@ def main() -> None:
     for arch, shape in combos:
         try:
             dryrun_one(arch, shape, multi_pod=args.multi_pod,
-                       method=args.method, fsdp=not args.no_fsdp,
+                       algo=args.algo or args.method or "a3po",
+                       fsdp=not args.no_fsdp,
                        ep_moe=args.ep_moe, kv_seq_shard=args.kv_seq_shard,
                        tp_fallback=args.tp_fallback,
                        hoist_gather=args.hoist_gather,

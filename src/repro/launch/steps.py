@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig, RLConfig
-from repro.core.objective import policy_objective as policy_loss
+from repro.core.algorithms import LossInputs, resolve_algorithm
 from repro.distributed.sharding import ShardingEnv, current_env
 from repro.kernels.logprob import token_logprob_entropy
 from repro.models import model as M
@@ -59,15 +59,19 @@ def _hoisted_gather(params, cfg: ModelConfig):
     return jax.tree.map(jax.lax.with_sharding_constraint, params, sh)
 
 
-def make_train_step(cfg: ModelConfig, rl: RLConfig, method: str = "loglinear",
+def make_train_step(cfg: ModelConfig, rl: RLConfig, algo="a3po",
                     current_version: int = 4, num_microbatches: int = 8,
                     hoist_fsdp_gather: bool = False):
     """Full RL training step over the global batch.
 
+    ``algo`` is an ``Algorithm`` or registry name; its requires-flags
+    decide which batch operands feed the loss (the dry-run stands in
+    ``behav_logp`` for the recomputed prox — same shape/sharding).
     Gradient-accumulates over ``num_microbatches`` (lax.scan) — the paper
     bounds minibatches at 10,240 tokens; accumulation keeps activation
     memory at 1/num_microbatches of the global batch while the HLO stays
     O(1) in microbatch count."""
+    algo = resolve_algorithm(algo, rl)
     F = cfg.frontend_tokens if cfg.frontend else 0
 
     def loss_fn(params, batch):
@@ -78,11 +82,13 @@ def make_train_step(cfg: ModelConfig, rl: RLConfig, method: str = "loglinear",
             hidden = hidden[:, F:]  # loss only over text positions
         w = output_head_weight(params["embedding"], cfg)
         logp, entropy = token_logprob_entropy(hidden, w, tokens[:, 1:])
-        loss, metrics = policy_loss(
-            method, logp, batch["behav_logp"], batch["advantages"],
-            batch["mask"], rl, versions=batch["versions"],
+        loss, metrics = algo.loss(logp, LossInputs(
+            advantages=batch["advantages"], mask=batch["mask"],
+            behav_logp=batch["behav_logp"], versions=batch["versions"],
             current_version=current_version,
-            recomputed_prox_logp=batch["behav_logp"], entropy=entropy)
+            prox_logp=(batch["behav_logp"] if algo.needs_prox_forward
+                       else None),
+            entropy=entropy), rl)
         return loss + aux, metrics
 
     def train_step(params, opt, batch):
@@ -173,9 +179,9 @@ def make_decode_step(cfg: ModelConfig, shape: InputShape):
 
 
 def make_step(cfg: ModelConfig, shape: InputShape, rl: RLConfig,
-              method: str = "loglinear"):
+              algo="a3po"):
     if shape.kind == "train":
-        return make_train_step(cfg, rl, method)
+        return make_train_step(cfg, rl, algo)
     if shape.kind == "prefill":
         return make_prefill_step(cfg, shape)
     return make_decode_step(cfg, shape)

@@ -10,9 +10,14 @@ engine against the full-scale mesh: params and Adam moments are placed with
 lowered + compiled with those in_shardings, and the launcher verifies no
 weight matrix is left fully replicated.
 
+Algorithm selection goes through the Algorithm registry
+(``core.algorithms``): ``--algo a3po|recompute|sync|asympo|grpo_mu|...``
+(``--algo list`` enumerates it, including third-party registrations).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch toy-2m --steps 20 \
-      --method loglinear [--mesh local|prod|prod-multipod]
+      --algo a3po [--mesh local|prod|prod-multipod]
+  PYTHONPATH=src python -m repro.launch.train --algo list
 """
 from __future__ import annotations
 
@@ -39,6 +44,11 @@ import numpy as np  # noqa: E402
 
 from repro.configs.base import RLConfig  # noqa: E402
 from repro.configs.registry import get_config  # noqa: E402
+from repro.core.algorithms import (  # noqa: E402
+    Algorithm,
+    registry_table,
+    resolve_algorithm,
+)
 from repro.async_rl.orchestrator import simulate_async  # noqa: E402
 from repro.data.tasks import ArithmeticTask  # noqa: E402
 from repro.distributed.sharding import (  # noqa: E402
@@ -63,7 +73,7 @@ def _replicated_weights(sh_tree, abs_tree) -> list:
     return bad
 
 
-def sharded_dryrun(cfg, rl: RLConfig, env: ShardingEnv, method: str,
+def sharded_dryrun(cfg, rl: RLConfig, env: ShardingEnv, algo: Algorithm,
                    batch_size: int = 32, seq_len: int = 14,
                    num_microbatches: int = 1) -> None:
     """Lower + compile the scan-based training engine on the production
@@ -101,14 +111,14 @@ def sharded_dryrun(cfg, rl: RLConfig, env: ShardingEnv, method: str,
     )
 
     step = functools.partial(
-        trainer_mod._train_step_impl, cfg=cfg, rl=rl, method=method,
+        trainer_mod._train_step_impl, cfg=cfg, rl=rl, algo=algo,
         num_minibatches=rl.num_minibatches,
         num_microbatches=num_microbatches)
 
     def wrapped(params, opt, batch):
         # the dry-run has no real recomputed prox; stand in with behav_logp
         # (same shape/sharding) so the compiled program is representative
-        prox = batch["behav_logp"] if method == "recompute" else None
+        prox = batch["behav_logp"] if algo.needs_prox_forward else None
         return step(params, opt, batch["version"], batch["tokens"],
                     batch["behav_logp"], batch["mask"], batch["versions"],
                     batch["rewards"], prox)
@@ -135,11 +145,30 @@ def sharded_dryrun(cfg, rl: RLConfig, env: ShardingEnv, method: str,
           f"sharded")
 
 
+def print_algo_list() -> None:
+    """``--algo list``: enumerate the Algorithm registry with flags."""
+    cols = ("needs_behav_logp", "needs_prox_forward", "needs_versions",
+            "needs_group_rewards", "on_policy")
+    header = f"{'name':10s} {'aliases':10s} " \
+        + " ".join(f"{c:>{len(c)}s}" for c in cols)
+    print(header)
+    print("-" * len(header))
+    for r in registry_table():
+        alias = ",".join(r["aliases"]) or "-"
+        flags = " ".join(f"{'yes' if r[c] else 'no':>{len(c)}s}"
+                         for c in cols)
+        print(f"{r['name']:10s} {alias:10s} {flags}  # {r['doc']}")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="toy-2m")
-    p.add_argument("--method", default="loglinear",
-                   choices=["loglinear", "recompute", "sync"])
+    p.add_argument("--algo", default=None,
+                   help="policy-optimization algorithm (registry name, "
+                        "default a3po), or 'list' to enumerate the "
+                        "registry")
+    p.add_argument("--method", default=None,
+                   help="DEPRECATED alias for --algo")
     p.add_argument("--steps", type=int, default=20)
     p.add_argument("--staleness", type=int, default=2)
     p.add_argument("--mesh", default="local",
@@ -149,6 +178,16 @@ def main() -> None:
     p.add_argument("--checkpoint", default=None)
     args = p.parse_args()
 
+    if args.algo == "list":
+        print_algo_list()
+        return
+    if args.method:
+        import warnings
+        warnings.warn("--method is deprecated; use --algo",
+                      DeprecationWarning)
+    # an explicit --algo always wins over the deprecated --method alias
+    algo = resolve_algorithm(args.algo or args.method or "a3po")
+
     if args.mesh == "local":
         mesh = make_local_mesh()
     else:
@@ -156,7 +195,7 @@ def main() -> None:
     env = ShardingEnv(mesh)
     n_dev = int(np.prod(list(mesh.shape.values())))
     print(f"mesh {dict(mesh.shape)} ({n_dev} devices), arch {args.arch}, "
-          f"method {args.method}")
+          f"algo {algo.name}")
 
     cfg = get_config(args.arch)
     if jax.default_backend() == "cpu":
@@ -168,7 +207,7 @@ def main() -> None:
     if args.mesh != "local" and jax.default_backend() == "cpu":
         # full-scale mesh on the host platform: dry-run the compiled,
         # sharded engine instead of stepping 256 emulated devices
-        sharded_dryrun(cfg, rl, env, args.method,
+        sharded_dryrun(cfg, rl, env, algo,
                        num_microbatches=args.microbatch)
         return
 
@@ -182,9 +221,9 @@ def main() -> None:
 
     with mesh, use_sharding(env):
         state, recs = simulate_async(
-            cfg, rl, task, args.method, args.steps, n_prompts=8,
+            cfg, rl, task, algo, args.steps, n_prompts=8,
             max_new_tokens=6,
-            staleness=0 if args.method == "sync" else args.staleness,
+            staleness=0 if algo.on_policy else args.staleness,
             num_microbatches=args.microbatch)
     for r in recs[:: max(1, len(recs) // 8)]:
         print(f"  step {r.step:3d} reward {r.reward:.3f} loss {r.loss:+.4f} "
@@ -193,7 +232,7 @@ def main() -> None:
               f"syncs {r.host_syncs:.0f}")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, {"params": state.params},
-                        {"arch": args.arch, "method": args.method,
+                        {"arch": args.arch, "algo": algo.name,
                          "steps": args.steps})
         print("saved", args.checkpoint)
 

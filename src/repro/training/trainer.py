@@ -11,16 +11,25 @@ optional inner gradient-accumulation scan over microbatches), Adam, and
 metric accumulation all run on device. Metrics are packed into one array,
 so a training step costs exactly **one** host transfer (plus the explicit
 prox forward for the 'recompute' baseline, which is the point of the
-comparison). The loss routes through ``core.objective`` — the fused
-``kernels/a3po_loss`` Pallas path for 'loglinear'. Params and Adam moments
-are placed with the active ``ShardingEnv``'s logical rules, and batch
-tensors carry ("pod","data") sharding constraints.
+comparison). Params and Adam moments are placed with the active
+``ShardingEnv``'s logical rules, and batch tensors carry ("pod","data")
+sharding constraints.
+
+Algorithm dispatch (PR 3): the engine takes a first-class ``Algorithm``
+(``core.algorithms``) instead of a method string. The frozen instance is
+hashed as a jit static, its ``loss`` runs inside the scan (the ``a3po``
+built-in still compiles to the fused ``kernels/a3po_loss`` Pallas path),
+and its requires-flags decide what the step computes at all: only
+``needs_prox_forward`` algorithms pay the extra forward pass, and only
+``needs_behav_logp`` / ``needs_versions`` algorithms get those tensors
+threaded through the compiled minibatch scan.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -28,8 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
-from repro.core.advantages import group_normalized_advantages
-from repro.core.objective import policy_objective
+from repro.core.algorithms import Algorithm, LossInputs, resolve_algorithm
 from repro.distributed.sharding import constrain, current_env
 from repro.kernels.logprob import token_logprob_entropy
 from repro.models import model as M
@@ -146,7 +154,7 @@ def recompute_prox_logp(params, cfg: ModelConfig, tokens: jax.Array
 # array is the step's one device->host transfer.
 METRIC_KEYS: Tuple[str, ...] = (
     "clipped_frac", "clipped_tokens", "entropy", "grad_norm", "iw_max",
-    "iw_mean", "iw_min", "loss", "ratio_mean", "reward_mean",
+    "iw_mean", "iw_min", "kl", "loss", "ratio_mean", "reward_mean",
     "staleness_mean", "tokens",
 )
 
@@ -171,11 +179,13 @@ def _constrain_batch(t: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
 
 def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
                      versions, rewards, prox_logp=None, *, cfg: ModelConfig,
-                     rl: RLConfig, method: str, num_minibatches: int,
+                     rl: RLConfig, algo: Algorithm, num_minibatches: int,
                      num_microbatches: int):
     """One full training step, compiled: advantages -> scan over minibatch
     updates (optionally gradient-accumulated over microbatches) -> packed
-    metrics. Exactly one output array carries every scalar metric."""
+    metrics. Exactly one output array carries every scalar metric. The
+    ``algo`` static supplies the loss and its requires-flags decide which
+    batch tensors are threaded through the minibatch scan at all."""
     B = tokens.shape[0]
     nmb = num_minibatches
     mb_size = B // nmb
@@ -189,8 +199,7 @@ def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
         full["tokens"], full["behav_logp"], full["mask"], full["versions"],
         full["rewards"])
 
-    adv_seq = group_normalized_advantages(rewards, rl.group_size)
-    advantages = adv_seq[:, None] * mask
+    advantages = algo.advantages(rewards, mask, rl)
 
     # full-batch staleness/reward telemetry (matches the seed trainer)
     d = version.astype(jnp.float32) - versions.astype(jnp.float32)
@@ -201,8 +210,14 @@ def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
     else:
         staleness_mean = d.mean()
 
-    mbt = dict(tokens=tokens, behav_logp=behav_logp, advantages=advantages,
-               mask=mask, versions=versions)
+    # requires-flags gate what enters the compiled minibatch scan: an
+    # algorithm that declares no use for behavior logps or version stamps
+    # never sees them (and XLA never materializes the minibatched copies)
+    mbt = dict(tokens=tokens, advantages=advantages, mask=mask)
+    if algo.needs_behav_logp:
+        mbt["behav_logp"] = behav_logp
+    if algo.needs_versions:
+        mbt["versions"] = versions
     if prox_logp is not None:
         mbt["prox"] = prox_logp
     # seed semantics: rows beyond nmb * mb_size are dropped from updates
@@ -214,10 +229,11 @@ def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
     def loss_fn(p, t):
         t = _constrain_batch(t)
         logp, entropy, aux = _score_tokens(p, cfg, t["tokens"])
-        loss, metrics = policy_objective(
-            method, logp, t["behav_logp"], t["advantages"], t["mask"], rl,
-            versions=t["versions"], current_version=version,
-            recomputed_prox_logp=t.get("prox"), entropy=entropy)
+        loss, metrics = algo.loss(logp, LossInputs(
+            advantages=t["advantages"], mask=t["mask"],
+            behav_logp=t.get("behav_logp"), versions=t.get("versions"),
+            current_version=version, prox_logp=t.get("prox"),
+            entropy=entropy), rl)
         return loss + aux, metrics
 
     def grads_of(p, t):
@@ -266,7 +282,7 @@ def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
     return params, opt, packed
 
 
-_STEP_STATICS = ("cfg", "rl", "method", "num_minibatches", "num_microbatches")
+_STEP_STATICS = ("cfg", "rl", "algo", "num_minibatches", "num_microbatches")
 # Default engine donates only the optimizer state: the async runtime keeps
 # older params alive as behavior policies (WeightStore / staleness history),
 # so donating them would invalidate live behavior-policy buffers.
@@ -283,21 +299,37 @@ _train_step_donating = jax.jit(_train_step_impl,
 class Trainer:
     """One training engine. ``step`` = the paper's 'training step'.
 
+    ``algo`` selects the policy-optimization algorithm: an ``Algorithm``
+    instance from ``core.algorithms``, a registry name, or None (falls
+    back to ``rl.algo`` / the deprecated ``rl.method`` string). The legacy
+    ``method=`` keyword still works but emits a ``DeprecationWarning``.
+
     ``num_microbatches`` > 1 adds gradient accumulation *inside* the
     minibatch scan for batches that exceed memory. ``donate_params=True``
     selects the params-donating compiled step (only safe when no other
     component holds the previous weights)."""
 
     def __init__(self, cfg: ModelConfig, rl: Optional[RLConfig] = None,
-                 method: str = "loglinear", *, num_microbatches: int = 1,
-                 donate_params: bool = False):
-        assert method in ("loglinear", "recompute", "sync")
+                 algo=None, *, method: Optional[str] = None,
+                 num_microbatches: int = 1, donate_params: bool = False):
+        if method is not None:
+            warnings.warn(
+                "Trainer(..., method=...) is deprecated; pass an Algorithm "
+                "or registry name as `algo` (repro.core.algorithms)",
+                DeprecationWarning, stacklevel=2)
+            if algo is None:
+                algo = method
         self.cfg = cfg
         self.rl = rl or RLConfig()
-        self.method = method
+        self.algo = resolve_algorithm(algo, self.rl)
         self.num_microbatches = num_microbatches
         self.donate_params = donate_params
         self.last_host_syncs = 0  # host transfers in the most recent step
+
+    @property
+    def method(self) -> str:
+        """Legacy spelling: the resolved algorithm's registry name."""
+        return self.algo.name
 
     def init_state(self, key, dtype=None) -> TrainState:
         """Initialize params + Adam moments, placed with the active
@@ -330,11 +362,12 @@ class Trainer:
                 "memory-saving accumulation would be silently skipped")
         host_syncs = 0
 
-        # --- explicit prox forward pass (recompute baseline only); for
-        # 'sync'/'loglinear' no prox operand enters the compiled step at all
+        # --- explicit prox forward pass, paid only by algorithms that
+        # declare needs_prox_forward (the recompute baseline); otherwise
+        # no prox operand enters the compiled step at all
         t0 = time.perf_counter()
         prox = None
-        if self.method == "recompute":
+        if self.algo.needs_prox_forward:
             prox = recompute_prox_logp(state.params, self.cfg, batch.tokens)
             prox.block_until_ready()
             host_syncs += 1
@@ -344,7 +377,7 @@ class Trainer:
         params, opt, packed = step_fn(
             state.params, state.opt, state.version, batch.tokens,
             batch.behav_logp, batch.response_mask, batch.versions,
-            batch.rewards, prox, cfg=self.cfg, rl=rl, method=self.method,
+            batch.rewards, prox, cfg=self.cfg, rl=rl, algo=self.algo,
             num_minibatches=nmb, num_microbatches=self.num_microbatches)
 
         # the single device->host transfer of the step

@@ -115,7 +115,7 @@ def reference_loop_step(cfg, rl, method, state, batch):
 
 PARITY_KEYS = ("loss", "grad_norm", "iw_max", "iw_min", "iw_mean",
                "ratio_mean", "clipped_tokens", "clipped_frac", "entropy",
-               "staleness_mean", "reward_mean")
+               "kl", "staleness_mean", "reward_mean")
 
 
 @pytest.mark.parametrize("method", ["loglinear", "recompute", "sync"])
