@@ -1,0 +1,121 @@
+"""Decode-path throughput: per-token steps vs the fused decode horizon.
+
+Measures tokens/sec and host-syncs-per-token of the continuous-batching
+engine across decode horizons H (1 = the per-token baseline: sampled
+tokens drained to the host every step) and slot counts. The fused path
+(`step_horizon`) runs H tokens per compiled launch and drains once, so
+the ratio at H=32 / max_seqs=8 is the headline serving speedup; the
+committed `experiments/decode_horizon.json` records it.
+
+Run directly (``python -m benchmarks.bench_decode [--quick]``) or as the
+``decode`` section of ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from benchmarks.common import CsvOut, toy_config
+from repro.configs.base import RLConfig
+from repro.models import model as M
+from repro.rollout.continuous import ContinuousBatchingEngine
+
+OUT_JSON = (pathlib.Path(__file__).resolve().parent.parent / "experiments"
+            / "decode_horizon.json")
+
+
+def _decode_run(cfg, params, *, horizon: int, max_seqs: int, max_new: int,
+                seed: int = 0) -> Tuple[float, int, int, int]:
+    """Prefill ``max_seqs`` requests, then time the decode loop only.
+
+    Returns (seconds, tokens, host_syncs, decode_launches).
+    """
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(4, cfg.vocab_size, size=12).astype(np.int32)
+               for _ in range(max_seqs)]
+    srv = ContinuousBatchingEngine(
+        cfg, max_seqs=max_seqs, block_size=8,
+        n_blocks=max_seqs * ((12 + max_new) // 8 + 2) + 1,
+        max_blocks_per_seq=(12 + max_new) // 8 + 2, rl=RLConfig(),
+        decode_horizon=horizon)
+    for p in prompts:
+        srv.submit(p, max_new=max_new)
+    srv._admit(params)  # prefill outside the timed region
+    key = jax.random.PRNGKey(1)
+    done = []
+    t0 = time.perf_counter()
+    while any(r is not None for r in srv.slots.values()):
+        key, sub = jax.random.split(key)
+        if horizon > 1:
+            done.extend(srv.step_horizon(params, sub))
+        else:
+            done.extend(srv.step(params, sub))
+    jax.block_until_ready(srv.state.pool_k)
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.generated) for r in done)
+    return dt, tokens, srv.host_syncs, srv.decode_launches
+
+
+def run(csv: CsvOut, *, quick: bool = False, save_json: bool = True) -> None:
+    cfg = toy_config()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    horizons = (1, 8) if quick else (1, 8, 32)
+    seq_counts = (4,) if quick else (4, 8)
+    max_new = 16 if quick else 64
+    rows = []
+    repeats = 1 if quick else 5
+    configs = [(s, h) for s in seq_counts for h in horizons]
+    for s, h in configs:  # warmup: compile + caches
+        _decode_run(cfg, params, horizon=h, max_seqs=s, max_new=max_new)
+    # interleaved rounds + best-of-N: noisy-neighbour CPU load hits every
+    # config equally instead of biasing whichever ran in a bad window
+    best = {}
+    for _ in range(repeats):
+        for s, h in configs:
+            r = _decode_run(cfg, params, horizon=h, max_seqs=s,
+                            max_new=max_new)
+            if (s, h) not in best or r[0] < best[(s, h)][0]:
+                best[(s, h)] = r
+    for max_seqs in seq_counts:
+        base_tps = None
+        for horizon in horizons:
+            dt, tokens, syncs, launches = best[(max_seqs, horizon)]
+            tps = tokens / dt
+            if horizon == 1:
+                base_tps = tps
+            row = dict(max_seqs=max_seqs, horizon=horizon, tokens=tokens,
+                       seconds=dt, tokens_per_s=tps,
+                       host_syncs=syncs, decode_launches=launches,
+                       host_syncs_per_token=syncs / tokens,
+                       host_syncs_per_launch=syncs / launches,
+                       speedup_vs_per_token=tps / base_tps)
+            rows.append(row)
+            csv.add(f"decode/s{max_seqs}_h{horizon}", dt / tokens,
+                    derived=f"tok/s={tps:.0f} syncs/tok={syncs/tokens:.3f} "
+                            f"speedup={tps / base_tps:.2f}x")
+    if save_json:
+        OUT_JSON.write_text(json.dumps(
+            {"bench": "decode_horizon", "max_new": max_new, "rows": rows},
+            indent=2) + "\n")
+        print(f"# wrote {OUT_JSON}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke: H in {1,8}, 4 slots, 16 new tokens; "
+                        "does not overwrite the committed JSON")
+    args = p.parse_args()
+    csv = CsvOut()
+    csv.header()
+    run(csv, quick=args.quick, save_json=not args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,8 @@
   kernels -> bench_kernels       (hot-spot microbenches)
   prefix  -> bench_prefix_cache  (radix prefix cache: shared prefills for
                                   GRPO-style grouped prompts)
+  decode  -> bench_decode        (serving: per-token vs fused-horizon
+                                  decode tokens/sec + host syncs)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -22,12 +24,12 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    choices=["fig1", "table1", "roofline", "kernels",
-                            "prefix"])
+                            "prefix", "decode"])
     p.add_argument("--steps", type=int, default=30,
                    help="RL steps for the training bench")
     p.add_argument("--quick", action="store_true",
                    help="CI smoke mode: tiny step counts, and only the "
-                        "fig1/table1 sections unless --only is given")
+                        "fig1/decode/table1 sections unless --only is given")
     args = p.parse_args()
     steps = min(args.steps, 3) if args.quick else args.steps
     sft_steps = 10 if args.quick else 150
@@ -49,12 +51,16 @@ def main() -> None:
             import traceback
             traceback.print_exc()
 
-    from benchmarks import (bench_kernels, bench_prefix_cache,
+    from benchmarks import (bench_decode, bench_kernels, bench_prefix_cache,
                             bench_prox_time, bench_roofline, bench_training)
     section("fig1", lambda: bench_prox_time.run(csv))
     section("kernels", lambda: bench_kernels.run(csv), skip_quick=True)
     section("roofline", lambda: bench_roofline.run(csv), skip_quick=True)
     section("prefix", lambda: bench_prefix_cache.run(csv), skip_quick=True)
+    # quick mode keeps a decode row (tiny horizon sweep) but never
+    # overwrites the committed experiment JSON (PR 3 convention)
+    section("decode", lambda: bench_decode.run(csv, quick=args.quick,
+                                               save_json=not args.quick))
     section("table1", lambda: bench_training.run(
         csv, num_steps=steps, sft_steps=sft_steps,
         save_json=not args.quick))

@@ -25,13 +25,15 @@ def main() -> None:
     p.add_argument("--requests", type=int, default=12)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--horizon", type=int, default=8,
+                   help="decode tokens per compiled launch (1 = per-token)")
     args = p.parse_args()
 
     cfg = dataclasses.replace(get_config("toy-2m"), dtype="float32")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     srv = ContinuousBatchingEngine(cfg, max_seqs=args.slots, block_size=8,
                                    n_blocks=128, max_blocks_per_seq=8,
-                                   greedy=True)
+                                   greedy=True, decode_horizon=args.horizon)
     task = ArithmeticTask(max_operand=99, n_terms=2, prompt_len=12, seed=3)
     batch = task.sample(args.requests)
     for i in range(args.requests):
@@ -42,8 +44,9 @@ def main() -> None:
     done = srv.run(params, jax.random.PRNGKey(1))
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.generated) for r in done)
-    print(f"{len(done)} requests through {args.slots} slots: "
-          f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+    print(f"{len(done)} requests through {args.slots} slots "
+          f"(horizon {args.horizon}): {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s, {srv.host_syncs} host syncs)")
     for r in done[:4]:
         print(f"  req{r.rid}: {tok.decode(r.prompt)!r} -> "
               f"{tok.decode(r.generated)!r}")

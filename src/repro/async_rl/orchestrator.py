@@ -83,7 +83,8 @@ class AsyncOrchestrator:
                  algo="a3po", n_prompts: int = 16,
                  max_new_tokens: int = 8, queue_capacity: int = 4,
                  seed: int = 0, use_control_plane: bool = False,
-                 serve_kwargs: Optional[Dict] = None):
+                 serve_kwargs: Optional[Dict] = None,
+                 decode_horizon: int = 8):
         self.cfg, self.rl, self.task = cfg, rl, task
         self.n_prompts = n_prompts
         self.max_new_tokens = max_new_tokens
@@ -97,6 +98,12 @@ class AsyncOrchestrator:
         # serving control plane (interruptible continuous batching with a
         # radix prefix cache) instead of the run-to-completion engine
         self.use_control_plane = use_control_plane
+        # decode horizon for the continuous-batching engine: tokens per
+        # compiled serving launch (host drains once per horizon). Weight
+        # publishes are absorbed at horizon boundaries; per-token version
+        # stamps stay truthful (first horizon token carries the version
+        # that produced its logits).
+        self.decode_horizon = decode_horizon
         self._serve_kwargs = serve_kwargs or {}
         self.control_plane = None
 
@@ -105,7 +112,8 @@ class AsyncOrchestrator:
         from repro.serving import (AdmissionScheduler, SchedulerConfig,
                                    ServingControlPlane)
         kw = dict(max_seqs=self.n_prompts * self.rl.group_size,
-                  block_size=8, n_blocks=512, max_blocks_per_seq=16)
+                  block_size=8, n_blocks=512, max_blocks_per_seq=16,
+                  decode_horizon=self.decode_horizon)
         kw.update(self._serve_kwargs)
         srv = ContinuousBatchingEngine(self.cfg, rl=self.rl, **kw)
         return ServingControlPlane(

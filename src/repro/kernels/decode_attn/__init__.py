@@ -1,4 +1,10 @@
 from repro.kernels.decode_attn.kernel import (  # noqa: F401
     decode_attention_pallas,
 )
-from repro.kernels.decode_attn.ops import decode_attention_op  # noqa: F401
+from repro.kernels.decode_attn.ops import (  # noqa: F401
+    decode_attention_op,
+    paged_decode_attention_op,
+)
+from repro.kernels.decode_attn.paged_kernel import (  # noqa: F401
+    paged_decode_attention_pallas,
+)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: paged (block-table) single-token decode attention.
+
+GPU PagedAttention walks the block table with pointer indirection inside
+the kernel; the XLA fallback in ``rollout.paged_cache.gather_kv``
+materializes a dense ``[S, max_blocks * block_size, KV, hd]`` view per
+layer instead — fine for toy pools, ruinous for production ones. This
+kernel is the TPU-native middle ground: the block table and sequence
+lengths ride in as *scalar-prefetch* operands, so the k/v ``index_map``
+selects the physical pool block for each (sequence, key-block) grid cell
+and only ``block_size`` rows of K/V ever stream through VMEM at a time.
+No dense per-slot materialization of the pool happens at any point.
+
+Grid: ``(n_seqs, n_heads, max_blocks_per_seq)`` with an online-softmax
+accumulator over the innermost (key-block) axis, masked by the
+per-sequence valid-token count. GQA is handled in the index_map (head h
+reads kv-head ``h // G``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_ref,
+            l_ref, *, bs: int, n_b: int, scale: float):
+    s_i = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)           # [1, hd]
+    k = k_ref[...].astype(jnp.float32)           # [bs, hd]
+    v = v_ref[...].astype(jnp.float32)           # [bs, hd]
+    n_valid = len_ref[s_i]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)[0] * scale  # [bs]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+    # positions past the valid count are masked; unmapped (-1) table
+    # entries are clamped to block 0 by the wrapper and always fall in
+    # the masked region (a sequence's valid tokens live in mapped blocks)
+    s = jnp.where(kpos < n_valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[0] = l_prev * corr + jnp.sum(p)
+    acc[...] = acc[...] * corr + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+
+    @pl.when(j == n_b - 1)
+    def _done():
+        o_ref[...] = (acc[...] / jnp.maximum(l_ref[0], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q: jax.Array, pool_k: jax.Array,
+                                  pool_v: jax.Array, block_tables: jax.Array,
+                                  lengths: jax.Array, *,
+                                  interpret: bool = True) -> jax.Array:
+    """q [S,H,hd]; pool_k/v [n_blocks,bs,KV,hd] (one layer's pool);
+    block_tables [S,max_blocks] int32 (-1 = unmapped); lengths [S]
+    valid-token counts -> [S,H,hd]."""
+    S, H, hd = q.shape
+    bs, KV = pool_k.shape[1], pool_k.shape[2]
+    mb = block_tables.shape[1]
+    G = H // KV
+    tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    kernel = functools.partial(_kernel, bs=bs, n_b=mb, scale=hd ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, H, mb),
+        in_specs=[
+            pl.BlockSpec((None, None, 1, hd),
+                         lambda s, h, j, tbl, ln: (s, h, 0, 0)),
+            # the paged gather: physical block straight from the table
+            pl.BlockSpec((None, bs, None, hd),
+                         lambda s, h, j, tbl, ln, G=G: (tbl[s, j], 0,
+                                                        h // G, 0)),
+            pl.BlockSpec((None, bs, None, hd),
+                         lambda s, h, j, tbl, ln, G=G: (tbl[s, j], 0,
+                                                        h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, 1, hd),
+                               lambda s, h, j, tbl, ln: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, q[:, :, None, :], pool_k, pool_v)[:, :, 0, :]

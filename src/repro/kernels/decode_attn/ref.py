@@ -1,2 +1,28 @@
-"""Oracle for single-token decode attention (shared with models.attention)."""
+"""Oracles for decode attention (shared with models.attention).
+
+``paged_decode_attention_ref`` is the XLA-gather adaptation of the paged
+pointer walk: index the dense block pool with the block table (one gather)
+and run the regular masked decode attention over the result. It is both
+the correctness oracle for the Pallas paged kernel and the non-TPU
+dispatch path of ``paged_decode_attention_op``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
 from repro.models.attention import decode_attention as decode_attention_ref  # noqa: F401
+
+
+def paged_decode_attention_ref(q: jax.Array, pool_k: jax.Array,
+                               pool_v: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """q [S,H,hd]; pool_k/v [n_blocks,bs,KV,hd]; block_tables [S,mb]
+    (-1 = unmapped); lengths [S] valid-token counts -> [S,H,hd]."""
+    S, mb = block_tables.shape
+    bs = pool_k.shape[1]
+    safe = jnp.maximum(block_tables, 0)
+    k = pool_k[safe].reshape(S, mb * bs, *pool_k.shape[2:])
+    v = pool_v[safe].reshape(S, mb * bs, *pool_v.shape[2:])
+    valid = jnp.arange(mb * bs)[None, :] < lengths[:, None]
+    return decode_attention_ref(q, k, v, valid)

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
 from repro.data import tokenizer as tok
+from repro.kernels.decode_attn.ops import paged_decode_attention_op
 from repro.models import model as M
 from repro.models.attention import decode_attention
 from repro.models.layers import (
@@ -29,7 +30,11 @@ from repro.models.layers import (
 )
 from repro.models.layers import swiglu
 from repro.rollout import paged_cache as pc
-from repro.rollout.sampler import greedy_token, sample_token
+from repro.rollout.sampler import (
+    fused_sample_step,
+    greedy_token,
+    sample_token,
+)
 
 
 @dataclasses.dataclass
@@ -62,26 +67,21 @@ class Request:
         self.done = False
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _paged_decode_step(params, cfg: ModelConfig, pool_k, pool_v,
-                       block_tables, seq_lens, tokens):
-    """One token for every slot against the paged pool.
+def _token_layer_stack(params, cfg: ModelConfig, lens, tokens, kv,
+                       append_attend):
+    """One-token transformer stack shared by both decode towers.
 
-    tokens: [S_max]; returns (logits [S_max, V], pool_k, pool_v).
+    Embeds ``tokens`` [S] and runs the layer stack;
+    ``append_attend(li, q, k, v, kv) -> (o, kv)`` owns the KV-cache
+    representation — the paged pool for the single-step path, a
+    horizon-local contiguous view for the fused loop — so the layer math
+    (and hence TPU/off-TPU bit-parity) lives in exactly one place.
+    Returns (logits [S, V], kv).
     """
-    bs = pool_k.shape[2]
-    n_slots, max_blocks = block_tables.shape
     x = embed_tokens(params["embedding"], tokens[:, None], cfg)[:, 0]
-    lens = seq_lens
-    safe_tables = jnp.maximum(block_tables, 0)
-
-    blk_idx = lens // bs
-    offset = lens % bs
-    write_block = jnp.take_along_axis(safe_tables, blk_idx[:, None],
-                                      axis=1)[:, 0]
 
     def layer(carry, xs):
-        x, pool_k, pool_v = carry
+        x, kv = carry
         lp, li = xs
         h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
         ap = lp["attn"]
@@ -90,20 +90,11 @@ def _paged_decode_step(params, cfg: ModelConfig, pool_k, pool_v,
         v = jnp.einsum("bd,dhk->bhk", h, ap["wv"])
         if cfg.qkv_bias:
             q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
-        q = apply_rope(q[:, None], lens[:, None], cfg.rope_theta)[:, 0]
-        k = apply_rope(k[:, None], lens[:, None], cfg.rope_theta)[:, 0]
-
-        pool_k = pool_k.at[li, write_block, offset].set(
-            k.astype(pool_k.dtype))
-        pool_v = pool_v.at[li, write_block, offset].set(
-            v.astype(pool_v.dtype))
-
-        kv_k = pool_k[li][safe_tables].reshape(
-            n_slots, max_blocks * bs, *pool_k.shape[3:])
-        kv_v = pool_v[li][safe_tables].reshape(
-            n_slots, max_blocks * bs, *pool_v.shape[3:])
-        valid = jnp.arange(max_blocks * bs)[None, :] <= lens[:, None]
-        o = decode_attention(q, kv_k, kv_v, valid)
+        # one rope over q‖k: positions (and their sin/cos) are shared
+        qk = apply_rope(jnp.concatenate([q, k], axis=1)[:, None],
+                        lens[:, None], cfg.rope_theta)[:, 0]
+        q, k = qk[:, : q.shape[1]], qk[:, q.shape[1]:]
+        o, kv = append_attend(li, q, k, v, kv)
         y = jnp.einsum("bhk,hkd->bd", o, ap["wo"])
         if cfg.parallel_block:
             f = swiglu(lp["ffn"], h)
@@ -112,14 +103,201 @@ def _paged_decode_step(params, cfg: ModelConfig, pool_k, pool_v,
             x = x + y
             h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
             x = x + swiglu(lp["ffn"], h2)
-        return (x, pool_k, pool_v), None
+        return (x, kv), None
 
     li = jnp.arange(len(cfg.block_kinds()), dtype=jnp.int32)
-    (x, pool_k, pool_v), _ = jax.lax.scan(
-        layer, (x, pool_k, pool_v), (params["blocks"], li))
+    # fully unrolled: serving stacks are shallow and the per-iteration
+    # scan machinery (dynamic pool slicing) dominates tiny decode matmuls
+    (x, kv), _ = jax.lax.scan(layer, (x, kv), (params["blocks"], li),
+                              unroll=True)
     x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)[:, 0]
     logits = logits_from_hidden(params["embedding"], x, cfg)
+    return logits, kv
+
+
+def _decode_tower(params, cfg: ModelConfig, pool_k, pool_v, block_tables,
+                  lens, tokens, write_block, offset):
+    """One-token layer stack over the paged pool.
+
+    Appends each layer's K/V at ``(write_block, offset)`` per slot and
+    attends through the block table via ``paged_decode_attention_op``
+    (Pallas on TPU, XLA gather elsewhere) -> (logits, pool_k, pool_v).
+    Callers choose the write targets: the single-step path writes at the
+    current length for every slot; the fused horizon redirects finished
+    slots to the scratch block so a masked-out step can never touch live
+    pages.
+    """
+    def append_attend(li, q, k, v, kv):
+        pool_k, pool_v = kv
+        pool_k = pool_k.at[li, write_block, offset].set(
+            k.astype(pool_k.dtype))
+        pool_v = pool_v.at[li, write_block, offset].set(
+            v.astype(pool_v.dtype))
+        # lens + 1: the just-written token is attended (inclusive mask)
+        o = paged_decode_attention_op(q, pool_k[li], pool_v[li],
+                                      block_tables, lens + 1)
+        return o, (pool_k, pool_v)
+
+    logits, (pool_k, pool_v) = _token_layer_stack(
+        params, cfg, lens, tokens, (pool_k, pool_v), append_attend)
     return logits, pool_k, pool_v
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("pool_k", "pool_v"))
+def _paged_decode_step(params, cfg: ModelConfig, pool_k, pool_v,
+                       block_tables, seq_lens, tokens):
+    """One token for every slot against the paged pool.
+
+    tokens: [S_max]; returns (logits [S_max, V], pool_k, pool_v).
+    """
+    bs = pool_k.shape[2]
+    safe_tables = jnp.maximum(block_tables, 0)
+    blk_idx = seq_lens // bs
+    write_block = jnp.take_along_axis(safe_tables, blk_idx[:, None],
+                                      axis=1)[:, 0]
+    return _decode_tower(params, cfg, pool_k, pool_v, block_tables,
+                         seq_lens, tokens, write_block, seq_lens % bs)
+
+
+def _decode_tower_view(params, cfg: ModelConfig, view_k, view_v, lens,
+                       tokens, rows):
+    """Horizon-local variant of ``_decode_tower`` over contiguous views.
+
+    ``view_k``/``view_v`` [L, S, max_blocks*bs, KV, hd] are each slot's
+    block-table gather, materialized ONCE per horizon — so the per-token
+    hot loop is an in-place append at ``(slot, lens)`` plus dense decode
+    attention, with no per-token pool gather/scatter. Identical values to
+    the paged path (the view captures exactly what the gather would
+    read), hence bit-identical logits.
+    """
+    # the inclusive valid mask is layer-independent: compute it once
+    valid = jnp.arange(view_k.shape[2])[None, :] <= lens[:, None]
+
+    def append_attend(li, q, k, v, kv):
+        view_k, view_v = kv
+        view_k = view_k.at[li, rows, lens].set(k.astype(view_k.dtype))
+        view_v = view_v.at[li, rows, lens].set(v.astype(view_v.dtype))
+        o = decode_attention(q, view_k[li], view_v[li], valid)
+        return o, (view_k, view_v)
+
+    logits, (view_k, view_v) = _token_layer_stack(
+        params, cfg, lens, tokens, (view_k, view_v), append_attend)
+    return logits, view_k, view_v
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "horizon", "temperature",
+                                             "top_p", "greedy",
+                                             "trash_block", "use_view"),
+                   donate_argnames=("pool_k", "pool_v"))
+def _paged_decode_horizon(params, cfg: ModelConfig, pool_k, pool_v,
+                          block_tables, seq_lens, next_logits,
+                          budget, key, *, trash_block: int, horizon: int,
+                          temperature: float, top_p: float, greedy: bool,
+                          use_view: Optional[bool] = None):
+    """A whole decode horizon as one compiled ``lax.scan``.
+
+    Each iteration samples on device from the carried logits
+    (``fused_sample_step``: PAD/zero-mask for finished rows, EOS folded
+    into the done flags), appends K/V, and bumps the emitting slots'
+    lengths — no host round-trip anywhere inside. ``budget`` [S] caps
+    per-slot emissions (a slot's remaining ``max_new``); finished or
+    over-budget slots keep decoding masked (their writes land in scratch
+    space and their mask is 0). The per-token key schedule is
+    ``key, sub = split(key)`` per iteration — exactly the schedule a
+    step-by-step driver uses, so seeded sampling is bit-identical to
+    ``horizon`` calls of ``step``.
+
+    On TPU the scan attends through the block table with the paged Pallas
+    kernel every token (no dense materialization — VMEM streaming is the
+    win there). Elsewhere the block table is frozen for the horizon
+    anyway, so each slot's KV view is gathered ONCE up front, the scan
+    runs on the contiguous views (same values, bit-identical logits), and
+    the new K/V is scattered back to the pool in one shot at the end —
+    removing the per-token gather/scatter that dominates XLA-CPU decode.
+
+    Returns (packed [3, horizon, S] float32 — tokens / logps / masks,
+    drained to host as ONE transfer), plus the updated pool, lengths, and
+    next-token logits, which all stay on device.
+    """
+    bs = pool_k.shape[2]
+    S, mb = block_tables.shape
+    safe_tables = jnp.maximum(block_tables, 0)
+    if use_view is None:
+        use_view = jax.default_backend() != "tpu"
+    rows = jnp.arange(S)
+    done0 = budget <= 0  # inactive slots ship with budget 0
+
+    def sample(logits, done, key, t):
+        key, sub = jax.random.split(key)
+        done_in = done | (t >= budget)
+        token, logp, mask, done_out = fused_sample_step(
+            logits, sub, done_in, temperature=temperature, top_p=top_p,
+            greedy=greedy)
+        done_out = done_out | (t + 1 >= budget)
+        return token, logp, mask, done_out, key
+
+    def one_token_paged(carry, t):
+        pool_k, pool_v, lens, logits, done, key = carry
+        token, logp, mask, done, key = sample(logits, done, key, t)
+        emit = mask > 0.0
+        blk_idx = lens // bs
+        wb = jnp.take_along_axis(safe_tables, blk_idx[:, None],
+                                 axis=1)[:, 0]
+        wb = jnp.where(emit, wb, trash_block)
+        off = jnp.where(emit, lens % bs, 0)
+        logits, pool_k, pool_v = _decode_tower(
+            params, cfg, pool_k, pool_v, block_tables, lens, token, wb,
+            off)
+        lens = lens + emit.astype(lens.dtype)
+        return (pool_k, pool_v, lens, logits, done, key), (token, logp,
+                                                           mask)
+
+    def one_token_view(carry, t):
+        view_k, view_v, lens, logits, done, key = carry
+        token, logp, mask, done, key = sample(logits, done, key, t)
+        # non-emitting slots overwrite their own (never-valid, never
+        # written-back) position `lens`; OOB appends are dropped
+        logits, view_k, view_v = _decode_tower_view(
+            params, cfg, view_k, view_v, lens, token, rows)
+        lens = lens + (mask > 0.0).astype(lens.dtype)
+        return (view_k, view_v, lens, logits, done, key), (token, logp,
+                                                           mask)
+
+    ts = jnp.arange(horizon, dtype=jnp.int32)
+    if use_view:
+        n_layers = pool_k.shape[0]
+        view_k = pool_k[:, safe_tables].reshape(
+            n_layers, S, mb * bs, *pool_k.shape[3:])
+        view_v = pool_v[:, safe_tables].reshape(
+            n_layers, S, mb * bs, *pool_v.shape[3:])
+        (view_k, view_v, lens, logits, _, _), (tokens, logps, masks) = \
+            jax.lax.scan(one_token_view,
+                         (view_k, view_v, seq_lens, next_logits, done0,
+                          key), ts)
+        # write the horizon's new K/V back to the paged pool in one shot:
+        # emissions are a prefix, so token t of slot s sits at view
+        # position seq_lens[s] + t; masked rows are parked on the
+        # scratch block
+        emits = masks > 0.0                              # [H, S]
+        pos = seq_lens[None, :] + ts[:, None]            # [H, S]
+        vpos = jnp.minimum(pos, mb * bs - 1)
+        new_k = view_k[:, rows[None, :], vpos]           # [L, H, S, KV, hd]
+        new_v = view_v[:, rows[None, :], vpos]
+        blk = safe_tables[rows[None, :], jnp.minimum(pos // bs, mb - 1)]
+        blk = jnp.where(emits, blk, trash_block).reshape(-1)
+        off = jnp.where(emits, pos % bs, 0).reshape(-1)
+        flat = (n_layers, horizon * S) + pool_k.shape[3:]
+        pool_k = pool_k.at[:, blk, off].set(new_k.reshape(flat))
+        pool_v = pool_v.at[:, blk, off].set(new_v.reshape(flat))
+    else:
+        (pool_k, pool_v, lens, logits, _, _), (tokens, logps, masks) = \
+            jax.lax.scan(one_token_paged,
+                         (pool_k, pool_v, seq_lens, next_logits, done0,
+                          key), ts)
+    # one packed drain: token ids are exact in f32 (vocab << 2**24)
+    packed = jnp.stack([tokens.astype(jnp.float32), logps, masks])
+    return packed, pool_k, pool_v, lens, logits
 
 
 class ContinuousBatchingEngine:
@@ -127,12 +305,18 @@ class ContinuousBatchingEngine:
                  block_size: int = 16, n_blocks: int = 256,
                  max_blocks_per_seq: int = 16,
                  rl: Optional[RLConfig] = None, greedy: bool = False,
-                 prefix_cache=None):
+                 prefix_cache=None, decode_horizon: int = 1):
         assert cfg.arch_type in ("dense",), "paged serving: dense archs"
         self.cfg = cfg
         self.rl = rl or RLConfig()
         self.greedy = greedy
         self.max_seqs = max_seqs
+        # tokens decoded per compiled launch: 1 = the per-token fallback
+        # (step), >1 = the fused horizon (step_horizon) — host bookkeeping
+        # then runs only at horizon boundaries. Callers that observe
+        # per-token state between steps (publish-interleaved tests, the
+        # per-token baseline bench) keep the default of 1.
+        self.decode_horizon = int(decode_horizon)
         # duck-typed serving.prefix_cache.RadixPrefixCache (kept untyped to
         # avoid a rollout -> serving import cycle)
         self.prefix_cache = prefix_cache
@@ -148,6 +332,13 @@ class ContinuousBatchingEngine:
         bt[:, 0] = self.trash_block
         self.state = dataclasses.replace(
             self.state, block_tables=jnp.asarray(bt))
+        # host mirrors of block_tables/seq_lens: all decode-path
+        # bookkeeping (capacity, CoW, release, headroom) reads these, so
+        # the hot loop never blocks on a device readback. Refreshed from
+        # the device after admission/prefill (_sync_mirrors), updated
+        # in-place at horizon boundaries.
+        self._tables = bt
+        self._lens = np.zeros((max_seqs,), np.int32)
         self.slots: Dict[int, Optional[Request]] = {
             i: None for i in range(max_seqs)}
         self._pending: List[Request] = []
@@ -157,6 +348,13 @@ class ContinuousBatchingEngine:
         # _next_logits row — the stamp for the *next* sampled token
         self._logits_version: List[int] = [0] * max_seqs
         self._rid = 0
+        # decode-path telemetry (ServingMetrics folds these into
+        # StepRecord.serving): blocking device->host drains, compiled
+        # decode launches, and tokens emitted.
+        self.host_syncs = 0
+        self.decode_launches = 0
+        self.tokens_emitted = 0
+        self.last_emitted = 0
 
     # ------------------------------------------------------------- requests
     def submit(self, prompt_ids, max_new: int = 16, *, priority: int = 0,
@@ -228,6 +426,13 @@ class ContinuousBatchingEngine:
         assert self.slots[slot] is None, f"slot {slot} occupied"
         self.slots[slot] = req
         self._prefill_into(params, slot, req, version=version)
+        self._sync_mirrors()
+
+    def _sync_mirrors(self) -> None:
+        """Refresh host mirrors from the device (admission/prefill only —
+        the decode loop itself never reads device state back)."""
+        self._tables = np.array(self.state.block_tables)
+        self._lens = np.array(self.state.seq_lens)
 
     def _prefill_into(self, params, slot: int, req: Request,
                       version: int = 0) -> None:
@@ -305,6 +510,46 @@ class ContinuousBatchingEngine:
             self._next_logits = self._next_logits.at[slot].set(logits[slot])
 
     # ----------------------------------------------------------------- step
+    def _prepare_decode(self, slot_tokens: Dict[int, int]) -> None:
+        """Horizon-boundary bookkeeping, entirely on the host mirrors.
+
+        Reclaims allocator headroom for everything the next
+        ``slot_tokens[slot]`` writes of each slot may need, forks the
+        first write block of any slot resuming on radix-cache-shared
+        pages (only that block can be shared: later blocks in the write
+        range are always freshly allocated), and pre-maps every missing
+        block — then pushes the block-table mirror to the device at most
+        once. No device readback anywhere.
+        """
+        bs = self.state.block_size
+        mb = self.state.max_blocks
+        need = 0
+        for slot, n in slot_tokens.items():
+            if n <= 0:
+                continue
+            first, last = pc.write_range(int(self._lens[slot]), n, bs, mb)
+            need += int(np.sum(self._tables[slot, first: last + 1] < 0))
+            blk = int(self._tables[slot, first])
+            if blk >= 0 and self.allocator.refs(blk) > 1:
+                need += 1  # CoW fork below
+        self._reclaim_headroom(need)
+        dirty = False
+        for slot, n in slot_tokens.items():
+            if n <= 0:
+                continue
+            first = int(self._lens[slot]) // bs
+            blk = int(self._tables[slot, first])
+            if blk >= 0 and self.allocator.refs(blk) > 1:
+                self.state, new = pc.fork_block(self.state, self.allocator,
+                                                blk)
+                self._tables[slot, first] = new
+                dirty = True
+        dirty |= pc.alloc_horizon_blocks(self.allocator, self._tables,
+                                         self._lens, slot_tokens, bs)
+        if dirty:
+            self.state = dataclasses.replace(
+                self.state, block_tables=jnp.asarray(self._tables))
+
     def step(self, params, key, version: int = 0) -> List[Request]:
         """One decode step for every active slot; returns finished reqs.
 
@@ -312,6 +557,10 @@ class ContinuousBatchingEngine:
         generation): in-flight sequences keep their paged KV and resume
         under the new weights, and every sampled token is stamped with the
         version of the params that produced its logits.
+
+        This is the per-token fallback path (``decode_horizon=1``): it
+        pays one sampled-token drain per token. ``step_horizon`` amortizes
+        that over a whole compiled horizon.
         """
         if self.greedy:
             tokens, logps = greedy_token(self._next_logits)
@@ -321,25 +570,25 @@ class ContinuousBatchingEngine:
                                          top_p=self.rl.top_p)
         tokens = np.asarray(tokens)
         logps = np.asarray(logps)
+        self.host_syncs += 2  # token + logp drains, one per token decoded
+        self.decode_launches += 1
         active = [s for s, r in self.slots.items() if r is not None]
-        for slot in active:
-            self._reclaim_headroom(2)  # capacity growth + possible fork
-            self.state = pc.ensure_capacity(self.state, self.allocator,
-                                            slot)
-            # CoW guard: never write into a radix-cache-shared block
-            self.state = pc.ensure_writable(self.state, self.allocator,
-                                            slot)
+        self._prepare_decode({slot: 1 for slot in active})
         logits, pool_k, pool_v = _paged_decode_step(
             params, self.cfg, self.state.pool_k, self.state.pool_v,
             self.state.block_tables, self.state.seq_lens,
             jnp.asarray(tokens))
         self._next_logits = logits
-        # bump active lens only
-        lens = self.state.seq_lens
-        for slot in active:
-            lens = lens.at[slot].add(1)
-        self.state = dataclasses.replace(self.state, pool_k=pool_k,
-                                         pool_v=pool_v, seq_lens=lens)
+        # bump all active lens with a single vectorized update
+        active_mask = np.zeros((self.max_seqs,), bool)
+        active_mask[active] = True
+        self.state = dataclasses.replace(
+            self.state, pool_k=pool_k, pool_v=pool_v,
+            seq_lens=self.state.seq_lens
+            + jnp.asarray(active_mask, jnp.int32))
+        self._lens += active_mask
+        self.last_emitted = len(active)
+        self.tokens_emitted += len(active)
         finished: List[Request] = []
         for slot in active:
             req = self.slots[slot]
@@ -357,21 +606,108 @@ class ContinuousBatchingEngine:
                 self._logits_version[slot] = version
         return finished
 
-    def release_slot(self, slot: int) -> Optional[Request]:
-        """Free a slot's pages (finish or preemption) and park it."""
-        req = self.slots[slot]
-        self.state = pc.release_sequence(self.state, self.allocator, slot)
-        # park the idle slot back on the scratch block
-        self.state = dataclasses.replace(
-            self.state,
-            block_tables=self.state.block_tables.at[slot, 0].set(
-                self.trash_block))
+    def step_horizon(self, params, key, version: int = 0) -> List[Request]:
+        """Decode up to ``decode_horizon`` tokens per active slot in one
+        compiled launch; returns finished reqs.
+
+        Sampling, paged KV appends, EOS done-masking, and length bumps
+        all run inside the jitted scan; tokens/logps/masks drain to the
+        host as ONE packed transfer per horizon (vs ~2 per token for
+        ``step``). Host bookkeeping — capacity, CoW, slot release, stamps
+        — happens only here, at the boundary. Token 0 of the horizon is
+        stamped with the version that produced the carried-in logits;
+        later tokens with ``version`` (the params decoding this horizon),
+        exactly as ``horizon`` per-token steps would stamp them.
+        """
+        H = self.decode_horizon
+        active = {s: r for s, r in self.slots.items() if r is not None}
+        if not active:
+            return []
+        budget = np.zeros((self.max_seqs,), np.int32)
+        for s, r in active.items():
+            budget[s] = min(H, r.max_new - len(r.generated))
+        self._prepare_decode({s: int(budget[s]) for s in active})
+        packed, pool_k, pool_v, lens, logits = _paged_decode_horizon(
+            params, self.cfg, self.state.pool_k, self.state.pool_v,
+            self.state.block_tables, self.state.seq_lens,
+            self._next_logits, jnp.asarray(budget), key,
+            trash_block=self.trash_block, horizon=H,
+            temperature=self.rl.temperature, top_p=self.rl.top_p,
+            greedy=self.greedy)
+        self.state = dataclasses.replace(self.state, pool_k=pool_k,
+                                         pool_v=pool_v, seq_lens=lens)
+        self._next_logits = logits
+        drained = np.asarray(packed)  # the one blocking drain per horizon
+        self.host_syncs += 1
+        self.decode_launches += 1
+        tokens = drained[0].astype(np.int64)
+        logps, masks = drained[1], drained[2]
+        # emissions are a prefix per slot (done is sticky), so the mask sum
+        # is the emitted count — no per-token host loop
+        n_emit = masks.sum(axis=0).astype(np.int64)
+        finished: List[Request] = []
+        released: List[int] = []
+        for s, r in active.items():
+            n = int(n_emit[s])
+            if n:
+                r.generated.extend(tokens[:n, s].tolist())
+                r.gen_logp.extend(logps[:n, s].tolist())
+                r.token_versions.append(int(self._logits_version[s]))
+                r.token_versions.extend([version] * (n - 1))
+            self._lens[s] += n
+            if (n and r.generated[-1] == tok.EOS) \
+                    or len(r.generated) >= r.max_new:
+                r.done = True
+                finished.append(r)
+                released.append(s)
+            else:
+                self._logits_version[s] = version
+        if released:
+            # free all finished slots' pages with ONE device update (vs a
+            # per-slot release_slot dispatch pair)
+            for s in released:
+                self._release_host(s)
+            idx = jnp.asarray(np.asarray(released, np.int32))
+            self.state = dataclasses.replace(
+                self.state,
+                block_tables=self.state.block_tables.at[idx].set(
+                    jnp.asarray(self._tables[released])),
+                seq_lens=self.state.seq_lens.at[idx].set(0))
+        self.last_emitted = int(n_emit.sum())
+        self.tokens_emitted += self.last_emitted
+        return finished
+
+    def _release_host(self, slot: int) -> None:
+        """Host half of a slot release: return pages to the allocator and
+        reset the mirrors + slot bookkeeping (callers push to device)."""
+        self.allocator.release(
+            [int(b) for b in self._tables[slot] if b >= 0])
+        self._tables[slot] = -1
+        self._tables[slot, 0] = self.trash_block
+        self._lens[slot] = 0
         self.slots[slot] = None
         self._logits_version[slot] = 0
+
+    def release_slot(self, slot: int) -> Optional[Request]:
+        """Free a slot's pages (finish or preemption) and park it.
+
+        Works off the host block-table mirror — no device readback — and
+        parks the idle slot back on the scratch block.
+        """
+        req = self.slots[slot]
+        self._release_host(slot)
+        self.state = dataclasses.replace(
+            self.state,
+            block_tables=self.state.block_tables.at[slot].set(
+                jnp.asarray(self._tables[slot])),
+            seq_lens=self.state.seq_lens.at[slot].set(0))
         return req
 
     # ------------------------------------------------------------------ run
     def run(self, params, key, max_steps: int = 10_000) -> List[Request]:
+        """Drive admission + decode to completion. With ``decode_horizon``
+        > 1 each iteration is a fused horizon (``max_steps`` counts
+        launches, not tokens)."""
         done: List[Request] = []
         steps = 0
         while (self._pending or any(r is not None
@@ -380,7 +716,10 @@ class ContinuousBatchingEngine:
             if not any(r is not None for r in self.slots.values()):
                 break
             key, sub = jax.random.split(key)
-            done.extend(self.step(params, sub))
+            if self.decode_horizon > 1:
+                done.extend(self.step_horizon(params, sub))
+            else:
+                done.extend(self.step(params, sub))
             steps += 1
             if steps > max_steps:
                 raise RuntimeError("serving loop exceeded max_steps")

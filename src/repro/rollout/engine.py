@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig, RLConfig
 from repro.data import tokenizer as tok
 from repro.models import model as M
 from repro.models.layers import logits_from_hidden
-from repro.rollout.sampler import greedy_token, sample_token
+from repro.rollout.sampler import fused_sample_step
 
 
 @dataclasses.dataclass
@@ -63,15 +63,9 @@ def _generate_jit(params, cfg: ModelConfig, prompts, prompt_lengths, key,
 
     def step(carry, key_t):
         logits, cache, done = carry
-        if greedy:
-            token, logp = greedy_token(logits)
-        else:
-            token, logp = sample_token(logits, key_t,
-                                       temperature=temperature, top_p=top_p)
-        token = jnp.where(done, tok.PAD, token)
-        logp = jnp.where(done, 0.0, logp)
-        mask = (~done).astype(jnp.float32)
-        done = done | (token == tok.EOS)
+        token, logp, mask, done = fused_sample_step(
+            logits, key_t, done, temperature=temperature, top_p=top_p,
+            greedy=greedy)
         logits, cache = M.decode_step(params, cfg, cache, token)
         return (logits, cache, done), (token, logp, mask)
 

@@ -195,6 +195,45 @@ def ensure_capacity(state: PagedCacheState, allocator: BlockAllocator,
     return state
 
 
+def write_range(length: int, n_tokens: int, block_size: int,
+                max_blocks: int) -> Tuple[int, int]:
+    """(first, last) block indices the next ``n_tokens`` writes of a
+    sequence at ``length`` will touch — the single definition both the
+    headroom estimate and the actual allocation use."""
+    first = length // block_size
+    last = (length + n_tokens - 1) // block_size
+    if last >= max_blocks:
+        raise RuntimeError("sequence exceeded max_blocks_per_seq")
+    return first, last
+
+
+def alloc_horizon_blocks(allocator: BlockAllocator, tables: np.ndarray,
+                         lens: np.ndarray, slot_tokens: Dict[int, int],
+                         block_size: int) -> bool:
+    """Pre-map every block the next ``n`` writes of each slot will touch.
+
+    ``slot_tokens`` maps slot -> upcoming token count (a decode horizon).
+    ``tables``/``lens`` are the caller's *host mirrors* of the device
+    block tables and sequence lengths: the mirror is edited in place and
+    no device readback happens here, so a fused multi-token decode can be
+    prepared with zero blocking transfers (the caller pushes the mirror
+    to the device once, if anything changed). Returns True when at least
+    one block was mapped.
+    """
+    changed = False
+    for slot, n_tokens in slot_tokens.items():
+        if n_tokens <= 0:
+            continue
+        first, last = write_range(int(lens[slot]), n_tokens, block_size,
+                                  tables.shape[1])
+        for i in range(first, last + 1):
+            if tables[slot, i] < 0:
+                (blk,) = allocator.alloc(1)
+                tables[slot, i] = blk
+                changed = True
+    return changed
+
+
 def map_sequence_prefixed(state: PagedCacheState, allocator: BlockAllocator,
                           slot: int, prefix_blocks: List[int],
                           n_prefix_tokens: int, n_tokens: int

@@ -12,6 +12,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.data import tokenizer as tok
+
 
 def sample_token(logits: jax.Array, key: jax.Array, *,
                  temperature: float = 1.0, top_p: float = 1.0
@@ -38,3 +40,30 @@ def greedy_token(logits: jax.Array) -> Tuple[jax.Array, jax.Array]:
     token = jnp.argmax(logits, axis=-1)
     return token, jnp.take_along_axis(logp_full, token[:, None],
                                       axis=-1)[:, 0]
+
+
+def fused_sample_step(logits: jax.Array, key: jax.Array, done: jax.Array, *,
+                      temperature: float = 1.0, top_p: float = 1.0,
+                      greedy: bool = False
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One on-device step of a fused (scanned) decode loop.
+
+    Samples a token per row, masks rows that already finished (PAD token,
+    zero logp, zero mask) and folds the EOS check into the done flags —
+    the shared sampling step of ``RolloutEngine._generate_jit`` and the
+    continuous-batching engine's fused decode horizon.
+
+    logits [B,V]; done [B] bool -> (token [B], logp [B], mask [B] f32,
+    done' [B]). ``mask`` is 1.0 exactly where a token was emitted (up to
+    and including EOS); ``greedy`` ignores ``key``.
+    """
+    if greedy:
+        token, logp = greedy_token(logits)
+    else:
+        token, logp = sample_token(logits, key, temperature=temperature,
+                                   top_p=top_p)
+    token = jnp.where(done, tok.PAD, token)
+    logp = jnp.where(done, 0.0, logp)
+    mask = (~done).astype(jnp.float32)
+    done = done | (token == tok.EOS)
+    return token, logp, mask, done

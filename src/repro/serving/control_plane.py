@@ -122,9 +122,26 @@ class ServingControlPlane:
 
         finished: List[Request] = []
         if self.n_inflight:
-            n_active = self.n_inflight
-            finished = self.engine.step(params, key, version=version)
-            self.metrics.decode_tokens += n_active
+            # one decode launch: a fused horizon (decode_horizon tokens per
+            # slot, one host drain) or the per-token fallback. Admission,
+            # preemption, and interrupt polling above all happen at this
+            # boundary — never inside the compiled loop.
+            t0 = time.perf_counter()
+            syncs0 = self.engine.host_syncs
+            launches0 = self.engine.decode_launches
+            if self.engine.decode_horizon > 1:
+                finished = self.engine.step_horizon(params, key,
+                                                    version=version)
+            else:
+                finished = self.engine.step(params, key, version=version)
+            self.metrics.decode_time_s += time.perf_counter() - t0
+            self.metrics.decode_tokens += self.engine.last_emitted
+            # deltas, not lifetime counters: the engine may predate this
+            # plane (warmup runs, shared engines)
+            self.metrics.decode_host_syncs += \
+                self.engine.host_syncs - syncs0
+            self.metrics.decode_launches += \
+                self.engine.decode_launches - launches0
             alloc = self.engine.allocator
             self.metrics.page_utilization.observe(
                 1.0 - alloc.n_free / max(alloc.n_blocks, 1))

@@ -84,6 +84,13 @@ class ServingMetrics:
     prefix_prompt_tokens: int = 0
     prefill_tokens_computed: int = 0
     decode_tokens: int = 0
+    # fused-horizon serving telemetry: blocking device->host drains on the
+    # decode path, compiled decode launches (one per horizon), and wall
+    # time spent decoding — host_syncs/token ~2 for the per-token loop,
+    # <= 1/decode_launch (i.e. 1 per horizon) for the fused path.
+    decode_host_syncs: int = 0
+    decode_launches: int = 0
+    decode_time_s: float = 0.0
     interrupts: int = 0          # weight publishes observed with work in flight
     resumed_sequences: int = 0   # in-flight seqs carried across a publish
     preemptions: int = 0
@@ -97,6 +104,16 @@ class ServingMetrics:
         if not self.prefix_prompt_tokens:
             return 0.0
         return self.prefix_hit_tokens / self.prefix_prompt_tokens
+
+    @property
+    def host_syncs_per_token(self) -> float:
+        return self.decode_host_syncs / max(self.decode_tokens, 1)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        if self.decode_time_s <= 0.0:
+            return 0.0
+        return self.decode_tokens / self.decode_time_s
 
     def observe_request(self, *, prompt_tokens: int, prefix_hit: int,
                         queue_delay_s: float) -> None:
@@ -121,6 +138,11 @@ class ServingMetrics:
             prefix_hit_tokens=float(self.prefix_hit_tokens),
             prefill_tokens_computed=float(self.prefill_tokens_computed),
             decode_tokens=float(self.decode_tokens),
+            decode_host_syncs=float(self.decode_host_syncs),
+            decode_launches=float(self.decode_launches),
+            decode_time_s=self.decode_time_s,
+            host_syncs_per_token=self.host_syncs_per_token,
+            decode_tokens_per_s=self.decode_tokens_per_s,
             interrupts=float(self.interrupts),
             resumed_sequences=float(self.resumed_sequences),
             preemptions=float(self.preemptions),

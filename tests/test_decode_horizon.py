@@ -1,0 +1,226 @@
+"""Fused decode horizon: parity with the per-token loop (greedy + seeded
+sampling), EOS / budget handling mid-horizon, and host-sync accounting
+surfaced through ServingMetrics (the StepRecord.serving payload)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.async_rl.weights import WeightStore
+from repro.configs.base import RLConfig
+from repro.configs.registry import get_config
+from repro.data import tokenizer as tok
+from repro.models import model as M
+from repro.rollout.continuous import ContinuousBatchingEngine
+from repro.serving import (
+    AdmissionScheduler,
+    SchedulerConfig,
+    ServingControlPlane,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("toy-2m"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, **kw):
+    base = dict(max_seqs=4, block_size=4, n_blocks=64,
+                max_blocks_per_seq=16, rl=RLConfig(top_p=0.9))
+    base.update(kw)
+    return ContinuousBatchingEngine(cfg, **base)
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, cfg.vocab_size,
+                         size=rng.integers(5, 13)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _all_requests(engine, done):
+    reqs = {r.rid: r for r in done}
+    reqs.update({r.rid: r for r in engine.slots.values() if r is not None})
+    return reqs
+
+
+def test_horizon_matches_per_token_greedy(setup):
+    """Full run() — admission, slot reuse, release — is bit-identical
+    between decode_horizon=1 (per-token) and a fused 8-token horizon."""
+    cfg, params = setup
+    prompts = _prompts(cfg, 6)
+    outs = {}
+    for H in (1, 8):
+        srv = _engine(cfg, greedy=True, decode_horizon=H)
+        for p in prompts:
+            srv.submit(p, max_new=12)
+        done = srv.run(params, jax.random.PRNGKey(1))
+        assert len(done) == len(prompts)
+        # every page back in the pool (minus the reserved scratch block)
+        assert srv.allocator.n_free == 64 - 1
+        outs[H] = {r.rid: r for r in done}
+    for rid, a in outs[1].items():
+        b = outs[8][rid]
+        assert a.generated == b.generated
+        np.testing.assert_array_equal(np.float32(a.gen_logp),
+                                      np.float32(b.gen_logp))
+        assert a.token_versions == b.token_versions
+    # the fused path drained once per launch, the baseline twice per token
+    # (host_syncs counts blocking decode-path transfers)
+    assert outs  # engines are gone; counters checked in the sampled test
+
+
+def test_horizon_matches_per_token_sampled(setup):
+    """Seeded sampling: one fused horizon == H per-token steps under the
+    same key schedule (key, sub = split(key) per token), bit-exact in
+    tokens, behavior logps, and version stamps."""
+    cfg, params = setup
+    prompts = _prompts(cfg, 4, seed=3)
+    H = 8
+    ref = _engine(cfg, decode_horizon=1)
+    fus = _engine(cfg, decode_horizon=H)
+    for p in prompts:
+        ref.submit(p, max_new=H)
+        fus.submit(p, max_new=H)
+    ref._admit(params)
+    fus._admit(params)
+    key = jax.random.PRNGKey(11)
+    done_f = fus.step_horizon(params, key, version=7)
+    done_r, k = [], key
+    for _ in range(H):
+        if not any(r is not None for r in ref.slots.values()):
+            break
+        k, sub = jax.random.split(k)
+        done_r += ref.step(params, sub, version=7)
+    reqs_r = _all_requests(ref, done_r)
+    reqs_f = _all_requests(fus, done_f)
+    assert set(reqs_r) == set(reqs_f) == {1, 2, 3, 4}
+    for rid, a in reqs_r.items():
+        b = reqs_f[rid]
+        assert a.generated == b.generated
+        np.testing.assert_array_equal(np.float32(a.gen_logp),
+                                      np.float32(b.gen_logp))
+        # first horizon token stamped with the admit-time version (0),
+        # the rest with the decoding params' version (7)
+        assert a.token_versions == b.token_versions
+        assert b.token_versions[0] == 0
+        assert all(v == 7 for v in b.token_versions[1:])
+    # host-sync shape of the two paths: 1 drain per horizon vs 2 per token
+    assert fus.host_syncs == fus.decode_launches == 1
+    assert ref.host_syncs == 2 * ref.decode_launches
+
+
+def test_eos_mid_horizon_masks_and_releases(setup):
+    """A slot hitting EOS inside the horizon emits exactly through EOS
+    (mask 0 afterwards), releases its pages at the boundary, and never
+    perturbs the other slots."""
+    cfg, params = setup
+    srv = _engine(cfg, greedy=True, decode_horizon=8)
+    p1, p2 = _prompts(cfg, 2, seed=5)
+    srv.submit(p1, max_new=8)
+    srv.submit(p2, max_new=12)
+    srv._admit(params)
+    free_before = srv.allocator.n_free
+    # force slot 0's next sampled token to be EOS: done-masking must hold
+    # for the remaining 7 in-horizon steps
+    boost = jnp.zeros((cfg.vocab_size,), jnp.float32).at[tok.EOS].set(1e9)
+    srv._next_logits = srv._next_logits.at[0].add(boost)
+    done = srv.step_horizon(params, jax.random.PRNGKey(0))
+    assert [r.rid for r in done] == [1]
+    r = done[0]
+    assert r.done and r.generated == [tok.EOS]
+    assert len(r.gen_logp) == len(r.token_versions) == 1
+    assert srv.slots[0] is None  # released at the horizon boundary
+    assert srv.allocator.n_free > free_before
+    # the surviving slot decoded a full horizon in the same launch
+    r2 = srv.slots[1]
+    assert r2 is not None and len(r2.generated) == 8
+    assert srv.host_syncs == 1
+
+
+def test_budget_exhaustion_mid_horizon(setup):
+    """A request whose remaining max_new is shorter than the horizon stops
+    emitting at its budget and finishes in one launch."""
+    cfg, params = setup
+    srv = _engine(cfg, greedy=True, decode_horizon=8)
+    (p,) = _prompts(cfg, 1, seed=7)
+    srv.submit(p, max_new=3)
+    srv._admit(params)
+    done = srv.step_horizon(params, jax.random.PRNGKey(0))
+    assert len(done) == 1 and done[0].done
+    assert 1 <= len(done[0].generated) <= 3  # EOS may land earlier
+    assert srv.allocator.n_free == 64 - 1
+    assert srv.host_syncs == 1
+
+
+def test_horizon_view_branch_matches_paged_branch(setup):
+    """The off-TPU contiguous-view horizon and the per-token paged-op
+    horizon (the TPU branch, here via the XLA-gather dispatch) produce
+    identical drains, pools, lengths, and next logits."""
+    from repro.rollout.continuous import _paged_decode_horizon
+
+    cfg, params = setup
+    srv = _engine(cfg, decode_horizon=8)
+    for p in _prompts(cfg, 3, seed=13):
+        srv.submit(p, max_new=8)
+    srv._admit(params)
+    budget = np.zeros((srv.max_seqs,), np.int32)
+    for s, r in srv.slots.items():
+        if r is not None:
+            budget[s] = 8
+    st = srv.state
+    outs = {}
+    for use_view in (True, False):
+        outs[use_view] = _paged_decode_horizon(
+            params, cfg, jnp.array(st.pool_k), jnp.array(st.pool_v),
+            st.block_tables, st.seq_lens, srv._next_logits,
+            jnp.asarray(budget), jax.random.PRNGKey(4),
+            trash_block=srv.trash_block, horizon=8,
+            temperature=1.0, top_p=1.0, greedy=False, use_view=use_view)
+    packed_v, pk_v, pv_v, lens_v, logits_v = outs[True]
+    packed_p, pk_p, pv_p, lens_p, logits_p = outs[False]
+    np.testing.assert_array_equal(np.asarray(packed_v),
+                                  np.asarray(packed_p))
+    np.testing.assert_array_equal(np.asarray(lens_v), np.asarray(lens_p))
+    np.testing.assert_array_equal(np.asarray(logits_v),
+                                  np.asarray(logits_p))
+    # live pages agree; scratch-block garbage differs by construction
+    tables = np.asarray(st.block_tables)
+    live = sorted({int(b) for b in tables.ravel() if b >= 0}
+                  - {srv.trash_block})
+    np.testing.assert_array_equal(np.asarray(pk_v)[:, live],
+                                  np.asarray(pk_p)[:, live])
+    np.testing.assert_array_equal(np.asarray(pv_v)[:, live],
+                                  np.asarray(pv_p)[:, live])
+
+
+def test_control_plane_horizon_host_sync_accounting(setup):
+    """The StepRecord.serving payload (ServingMetrics.snapshot) exposes
+    the fused path's sync shape: exactly one host drain per decode launch
+    and well under one sync per token."""
+    cfg, params = setup
+    store = WeightStore(params, 0)
+    eng = _engine(cfg, decode_horizon=8)
+    cp = ServingControlPlane(eng, store,
+                             AdmissionScheduler(SchedulerConfig(d_max=100)))
+    prompts = _prompts(cfg, 4, seed=9)
+    pad = max(len(p) for p in prompts)
+    batch = np.zeros((4, pad), np.int32)
+    lengths = np.zeros((4,), np.int32)
+    for i, p in enumerate(prompts):
+        batch[i, : len(p)] = p
+        lengths[i] = len(p)
+    rb = cp.generate_batch(batch, lengths, jax.random.PRNGKey(2),
+                           max_new=16)
+    assert rb.gen_mask.sum() > 0
+    snap = cp.metrics.snapshot()
+    assert snap["decode_tokens"] == float(rb.gen_mask.sum())
+    # <= 1 host sync per horizon (acceptance criterion), amortized over
+    # up to max_seqs * horizon tokens per drain
+    assert snap["decode_host_syncs"] == snap["decode_launches"]
+    assert snap["host_syncs_per_token"] < 1.0
+    assert snap["decode_tokens_per_s"] > 0.0
