@@ -3,23 +3,31 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 
+from repro.obs.tracing import span
+
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
-            **kwargs) -> Tuple[float, object]:
-    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+            label: Optional[str] = None, **kwargs) -> Tuple[float, object]:
+    """Median wall time (seconds) of fn(*args) with block_until_ready.
+
+    ``label`` names a tracer span around each timed iteration (no-op when
+    no tracer is installed), so benchmark hot spots land in trace.json
+    alongside the phase spans the workload itself emits."""
     out = None
     for _ in range(warmup):
         out = fn(*args, **kwargs)
         jax.block_until_ready(out)
+    name = label or getattr(fn, "__name__", "bench_fn")
     times: List[float] = []
-    for _ in range(iters):
+    for i in range(iters):
         t0 = time.perf_counter()
-        out = fn(*args, **kwargs)
-        jax.block_until_ready(out)
+        with span(name, iter=i):
+            out = fn(*args, **kwargs)
+            jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2], out

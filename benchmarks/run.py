@@ -15,9 +15,14 @@ Prints ``name,us_per_call,derived`` CSV.
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 
 from benchmarks.common import CsvOut
+
+PHASE_JSON = (pathlib.Path(__file__).resolve().parent.parent
+              / "experiments" / "bench_phases.json")
 
 
 def main() -> None:
@@ -30,9 +35,21 @@ def main() -> None:
     p.add_argument("--quick", action="store_true",
                    help="CI smoke mode: tiny step counts, and only the "
                         "fig1/decode/table1 sections unless --only is given")
+    p.add_argument("--phase-json", default=None, metavar="FILE",
+                   help="attach the span tracer and write a per-phase "
+                        "(rollout/prefill/decode/train/publish) breakdown "
+                        "JSON; defaults on under --quick")
+    p.add_argument("--trace", default=None, metavar="FILE",
+                   help="also export the full Chrome trace.json")
     args = p.parse_args()
     steps = min(args.steps, 3) if args.quick else args.steps
     sft_steps = 10 if args.quick else 150
+
+    phase_json = args.phase_json or (str(PHASE_JSON) if args.quick else None)
+    tracer = None
+    if phase_json or args.trace:
+        from repro.obs.tracing import SpanTracer, install_tracer
+        tracer = install_tracer(SpanTracer())
 
     csv = CsvOut()
     csv.header()
@@ -64,6 +81,25 @@ def main() -> None:
     section("table1", lambda: bench_training.run(
         csv, num_steps=steps, sft_steps=sft_steps,
         save_json=not args.quick))
+
+    if tracer is not None:
+        from repro.obs.tracing import phase_breakdown
+        phases = phase_breakdown(tracer.events())
+        if args.trace:
+            tracer.export(args.trace)
+            print(f"# trace -> {args.trace}", flush=True)
+        if phase_json:
+            pathlib.Path(phase_json).parent.mkdir(parents=True,
+                                                  exist_ok=True)
+            with open(phase_json, "w") as f:
+                json.dump({"phases": phases,
+                           "quick": args.quick,
+                           "sections": args.only or "default"}, f, indent=2)
+            print(f"# phase breakdown -> {phase_json}", flush=True)
+        for name, st in sorted(phases.items()):
+            print(f"# phase {name}: {st['total_s']:.3f}s over "
+                  f"{st['count']} spans (mean {st['mean_ms']:.2f}ms)",
+                  flush=True)
 
     if failures:
         print(f"# FAILED sections: {failures}", file=sys.stderr)

@@ -27,6 +27,12 @@ from repro.configs.base import ModelConfig, RLConfig
 from repro.async_rl.buffer import RolloutQueue
 from repro.async_rl.weights import WeightStore
 from repro.data.tasks import ArithmeticTask
+from repro.obs.tracing import (
+    flow_end,
+    flow_start,
+    span,
+    step_annotation,
+)
 from repro.rollout.engine import RolloutEngine
 from repro.training.trainer import (
     TrainState,
@@ -145,33 +151,49 @@ class AsyncOrchestrator:
                 rb, rewards = self._rollout_once_cp(sub)
             else:
                 params, version = store.latest()
-                rb, rewards = _rollout_once(
-                    self.engine, self.task, params, version, self.n_prompts,
-                    self.rl.group_size, sub)
+                with span("rollout", version=version) as sp:
+                    rb, rewards = _rollout_once(
+                        self.engine, self.task, params, version,
+                        self.n_prompts, self.rl.group_size, sub)
+                    sp.set(reward_mean=float(np.mean(rewards)))
+                    # close the publish->rollout flow arrow: first
+                    # rollout generated under the published version
+                    flow_end("publish", version)
             self._rollout_times.append(time.perf_counter() - t0)
             rb.rewards = rewards  # piggyback
             if not self.queue.push(rb, timeout=1.0):
                 continue  # queue full — back-pressure
 
-    def run(self, state: TrainState, num_steps: int
-            ) -> (TrainState, List[StepRecord]):
+    def run(self, state: TrainState, num_steps: int,
+            run_logger=None) -> (TrainState, List[StepRecord]):
+        """Drive ``num_steps`` training steps against the live rollout
+        worker. ``run_logger`` (``obs.runlog.RunLogger``) gets exactly one
+        JSONL step record per training step."""
         store = WeightStore(state.params, int(state.version))
         if self.use_control_plane:
             self.control_plane = self._build_control_plane(store)
         worker = threading.Thread(target=self._rollout_worker,
-                                  args=(store,), daemon=True)
+                                  args=(store,), daemon=True,
+                                  name="rollout-worker")
         t_start = time.perf_counter()
         worker.start()
         records: List[StepRecord] = []
         try:
             for step in range(num_steps):
-                batches = self.queue.pop_fresh(int(state.version), n=1)
-                rewards = np.concatenate([b.rewards for b in batches])
-                tb = assemble_train_batch(batches, rewards)
-                t0 = time.perf_counter()
-                state, m = self.trainer.step(state, tb)
-                train_t = time.perf_counter() - t0
-                store.publish(state.params, int(state.version))
+                with step_annotation(step):
+                    batches = self.queue.pop_fresh(int(state.version), n=1)
+                    rewards = np.concatenate([b.rewards for b in batches])
+                    tb = assemble_train_batch(batches, rewards)
+                    t0 = time.perf_counter()
+                    with span("train_step", step=step):
+                        state, m = self.trainer.step(state, tb)
+                    train_t = time.perf_counter() - t0
+                    version = int(state.version)
+                    with span("weight_publish", version=version):
+                        store.publish(state.params, version)
+                        # open the publish->resume flow arrow (closed by
+                        # the first rollout/serving step under `version`)
+                        flow_start("publish", version)
                 serving = (self.control_plane.metrics.snapshot()
                            if self.control_plane is not None else None)
                 records.append(StepRecord(
@@ -187,6 +209,8 @@ class AsyncOrchestrator:
                     serving=serving,
                     train_tokens=m.get("tokens", 0.0),
                     host_syncs=m.get("host_syncs", 0.0)))
+                if run_logger is not None:
+                    run_logger.log_step(records[-1])
         finally:
             self._stop.set()
             worker.join(timeout=10.0)
@@ -202,12 +226,14 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
                    eval_every: int = 0,
                    eval_fn: Optional[Callable] = None,
                    num_microbatches: int = 1,
+                   run_logger=None,
                    ) -> (TrainState, List[StepRecord]):
     """Deterministic async simulation: behavior policy lags ``staleness``
     versions behind (0 == synchronous on-policy). ``algo`` is an
     ``Algorithm`` or registry name. ``eval_fn(params)`` is invoked every
     ``eval_every`` steps (the paper's held-out eval worker, Fig. 3);
-    results land in ``StepRecord.eval_reward``."""
+    results land in ``StepRecord.eval_reward``. ``run_logger``
+    (``obs.runlog.RunLogger``) gets one JSONL step record per step."""
     engine = RolloutEngine(cfg, rl, max_new_tokens)
     trainer = Trainer(cfg, rl, algo, num_microbatches=num_microbatches)
     key = jax.random.PRNGKey(seed)
@@ -220,15 +246,25 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
         behav_params, behav_version = history[0]
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()
-        rb, rewards = _rollout_once(engine, task, behav_params,
-                                    behav_version, n_prompts,
-                                    rl.group_size, sub)
+        with span("rollout", step=step, version=behav_version) as sp:
+            rb, rewards = _rollout_once(engine, task, behav_params,
+                                        behav_version, n_prompts,
+                                        rl.group_size, sub)
+            sp.set(reward_mean=float(np.mean(rewards)))
+            # close the publish->rollout staleness arrow: the simulated
+            # behavior policy first acts `staleness` steps after publish
+            flow_end("publish", behav_version)
         rollout_t = time.perf_counter() - t0
         tb = assemble_train_batch([rb], rewards)
         t0 = time.perf_counter()
-        state, m = trainer.step(state, tb)
+        with step_annotation(step), span("train_step", step=step,
+                                         staleness=staleness):
+            state, m = trainer.step(state, tb)
         train_t = time.perf_counter() - t0
-        history.append((state.params, int(state.version)))
+        version = int(state.version)
+        with span("weight_publish", version=version):
+            history.append((state.params, version))
+            flow_start("publish", version)
         rec = StepRecord(
             step=step, reward=m["reward_mean"], loss=m["loss"],
             entropy=m.get("entropy", 0.0), iw_max=m["iw_max"],
@@ -241,6 +277,8 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
         if eval_fn and eval_every and (step + 1) % eval_every == 0:
             rec.eval_reward = float(eval_fn(state.params))
         records.append(rec)
+        if run_logger is not None:
+            run_logger.log_step(rec)
         if record_hook:
             record_hook(step, m)
     return state, records

@@ -28,6 +28,7 @@ from repro.distributed.sharding import ShardingEnv, use_sharding  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import steps  # noqa: E402
 from repro.models import model as M  # noqa: E402
+from repro.obs.runlog import RunLogger  # noqa: E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "experiments", "dryrun")
@@ -52,7 +53,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                kv_seq_shard: bool = False, zero1: bool = False,
                tp_fallback: bool = False, ep_moe: bool = False,
                num_microbatches: int = 8, prefill_microbatches: int = 1,
-               tag_suffix: str = "") -> dict:
+               tag_suffix: str = "", run_logger: RunLogger = None) -> dict:
     from repro.core.algorithms import resolve_algorithm
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -115,7 +116,10 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
+    # newer jax returns a per-program list of dicts; older a single dict
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     # trip-count-aware per-device cost from the compiled HLO (XLA's
     # cost_analysis counts while bodies once — useless for scanned layers)
     hc = hlo_analyze(compiled.as_text())
@@ -165,11 +169,24 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     if verbose:
         mb = record["memory"].get("temp_size_in_bytes", 0) / 2**30
         arg_gb = record["memory"].get("argument_size_in_bytes", 0) / 2**30
-        print(f"[dryrun] {arch} x {shape_name} x {record['mesh']}: "
-              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
-              f"args {arg_gb:.2f}GiB temp {mb:.2f}GiB | "
-              f"flops/dev {flops:.3g} coll/dev {coll_bytes:.3g}B | "
-              f"dominant={terms['dominant']}", flush=True)
+        line = (f"[dryrun] {arch} x {shape_name} x {record['mesh']}: "
+                f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+                f"args {arg_gb:.2f}GiB temp {mb:.2f}GiB | "
+                f"flops/dev {flops:.3g} coll/dev {coll_bytes:.3g}B | "
+                f"dominant={terms['dominant']}")
+        if run_logger is not None:
+            run_logger.print(line)
+        else:
+            print(line, flush=True)
+    if run_logger is not None:
+        run_logger.log_event(
+            "dryrun", arch=arch, shape=shape_name, mesh=record["mesh"],
+            shape_kind=shape.kind, lower_s=record["lower_s"],
+            compile_s=record["compile_s"],
+            temp_bytes=record["memory"].get("temp_size_in_bytes", 0),
+            hlo_flops_per_device=flops,
+            collective_bytes_per_device=coll_bytes,
+            dominant=terms["dominant"])
     if save:
         os.makedirs(RESULTS_DIR, exist_ok=True)
         tag = f"{arch}_{shape_name}_{record['mesh']}"
@@ -204,6 +221,10 @@ def main() -> None:
     p.add_argument("--hoist-gather", action="store_true",
                    help="hoist FSDP weight all-gather out of microbatches")
     p.add_argument("--tag", default="", help="suffix for result files")
+    p.add_argument("--log-jsonl", default=None, metavar="FILE",
+                   help="append one schema-versioned JSONL record per combo")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress stdout progress lines (JSONL still logs)")
     args = p.parse_args()
     if args.method:
         import warnings
@@ -219,26 +240,33 @@ def main() -> None:
         assert args.arch and args.shape, "--arch/--shape or --all"
         combos = [(args.arch, args.shape)]
 
+    log = RunLogger(args.log_jsonl, quiet=args.quiet)
     failures = []
-    for arch, shape in combos:
-        try:
-            dryrun_one(arch, shape, multi_pod=args.multi_pod,
-                       algo=args.algo or args.method or "a3po",
-                       fsdp=not args.no_fsdp,
-                       ep_moe=args.ep_moe, kv_seq_shard=args.kv_seq_shard,
-                       tp_fallback=args.tp_fallback,
-                       hoist_gather=args.hoist_gather,
-                       tag_suffix=args.tag)
-        except Exception as e:  # noqa: BLE001
-            failures.append((arch, shape, repr(e)))
-            traceback.print_exc()
-    if failures:
-        print(f"\nFAILED {len(failures)}/{len(combos)}:")
-        for f in failures:
-            print("  ", f)
-        raise SystemExit(1)
-    print(f"\nALL {len(combos)} combos compiled OK "
-          f"({'2x16x16' if args.multi_pod else '16x16'})")
+    try:
+        for arch, shape in combos:
+            try:
+                dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                           algo=args.algo or args.method or "a3po",
+                           fsdp=not args.no_fsdp,
+                           ep_moe=args.ep_moe,
+                           kv_seq_shard=args.kv_seq_shard,
+                           tp_fallback=args.tp_fallback,
+                           hoist_gather=args.hoist_gather,
+                           tag_suffix=args.tag, run_logger=log)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, repr(e)))
+                log.log_event("dryrun_failure", arch=arch, shape=shape,
+                              error=repr(e))
+                traceback.print_exc()
+        if failures:
+            log.print(f"\nFAILED {len(failures)}/{len(combos)}:")
+            for f in failures:
+                log.print(f"   {f}")
+            raise SystemExit(1)
+        log.print(f"\nALL {len(combos)} combos compiled OK "
+                  f"({'2x16x16' if args.multi_pod else '16x16'})")
+    finally:
+        log.close()
 
 
 if __name__ == "__main__":

@@ -14,9 +14,24 @@ Algorithm selection goes through the Algorithm registry
 (``core.algorithms``): ``--algo a3po|recompute|sync|asympo|grpo_mu|...``
 (``--algo list`` enumerates it, including third-party registrations).
 
+Observability (``repro.obs``): ``--trace trace.json`` records spans for
+rollout, prefill, decode horizons, weight publishes, prox passes, and
+train steps (Chrome/Perfetto-loadable, publish->resume flow events
+included) and brackets the compiled hot paths with
+``jax.profiler.TraceAnnotation``; ``--log-jsonl run.jsonl`` writes one
+schema-versioned record per step; ``--quiet`` suppresses the human
+stdout lines; ``--metrics-prom FILE`` dumps the metrics registry in
+prometheus text format at exit. ``--engine async`` drives the real
+thread-decoupled orchestrator through the serving control plane
+(continuous batching + fused decode horizons) instead of the
+deterministic simulator. Render a run summary afterwards with
+``python -m repro.obs.report --jsonl run.jsonl --trace trace.json``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch toy-2m --steps 20 \
-      --algo a3po [--mesh local|prod|prod-multipod]
+      --algo a3po [--mesh local|prod|prod-multipod] \
+      [--trace trace.json] [--log-jsonl run.jsonl] [--quiet] \
+      [--engine sim|async]
   PYTHONPATH=src python -m repro.launch.train --algo list
 """
 from __future__ import annotations
@@ -58,6 +73,9 @@ from repro.distributed.sharding import (  # noqa: E402
 from repro.launch.mesh import make_local_mesh, make_production_mesh  # noqa: E402
 from repro.launch import steps  # noqa: E402
 from repro.models import model as M  # noqa: E402
+from repro.obs.metrics import get_registry  # noqa: E402
+from repro.obs.runlog import RunLogger  # noqa: E402
+from repro.obs.tracing import SpanTracer, install_tracer  # noqa: E402
 from repro.training import trainer as trainer_mod  # noqa: E402
 from repro.training.checkpoints import save_checkpoint  # noqa: E402
 
@@ -176,6 +194,23 @@ def main() -> None:
     p.add_argument("--microbatch", type=int, default=1,
                    help="gradient-accumulation microbatches per minibatch")
     p.add_argument("--checkpoint", default=None)
+    p.add_argument("--engine", default="sim", choices=["sim", "async"],
+                   help="sim: deterministic single-thread simulation; "
+                        "async: thread-decoupled orchestrator through the "
+                        "serving control plane (continuous batching, "
+                        "fused decode horizons, interruptible publishes)")
+    p.add_argument("--trace", default=None, metavar="FILE",
+                   help="record spans and export a Chrome/Perfetto "
+                        "trace.json here")
+    p.add_argument("--log-jsonl", default=None, metavar="FILE",
+                   help="write one schema-versioned JSONL record per "
+                        "training step")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress human status lines (JSONL/trace still "
+                        "written)")
+    p.add_argument("--metrics-prom", default=None, metavar="FILE",
+                   help="dump the metrics registry (serving + training) "
+                        "in prometheus text format at exit")
     args = p.parse_args()
 
     if args.algo == "list":
@@ -188,14 +223,21 @@ def main() -> None:
     # an explicit --algo always wins over the deprecated --method alias
     algo = resolve_algorithm(args.algo or args.method or "a3po")
 
+    log = RunLogger(args.log_jsonl, quiet=args.quiet)
+    tracer = (install_tracer(SpanTracer(), annotate_jax=True)
+              if args.trace else None)
+
     if args.mesh == "local":
         mesh = make_local_mesh()
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "prod-multipod")
     env = ShardingEnv(mesh)
     n_dev = int(np.prod(list(mesh.shape.values())))
-    print(f"mesh {dict(mesh.shape)} ({n_dev} devices), arch {args.arch}, "
-          f"algo {algo.name}")
+    log.print(f"mesh {dict(mesh.shape)} ({n_dev} devices), "
+              f"arch {args.arch}, algo {algo.name}")
+    log.log_event("meta", mesh=args.mesh, n_devices=n_dev, arch=args.arch,
+                  algo=algo.name, steps=args.steps, engine=args.engine,
+                  staleness=args.staleness)
 
     cfg = get_config(args.arch)
     if jax.default_backend() == "cpu":
@@ -209,6 +251,10 @@ def main() -> None:
         # sharded engine instead of stepping 256 emulated devices
         sharded_dryrun(cfg, rl, env, algo,
                        num_microbatches=args.microbatch)
+        if tracer is not None:
+            install_tracer(None)
+            tracer.export(args.trace)
+        log.close()
         return
 
     if jax.default_backend() == "cpu" and cfg.num_params() > 5e7:
@@ -220,21 +266,41 @@ def main() -> None:
     task = ArithmeticTask(max_operand=9, n_terms=2, prompt_len=8)
 
     with mesh, use_sharding(env):
-        state, recs = simulate_async(
-            cfg, rl, task, algo, args.steps, n_prompts=8,
-            max_new_tokens=6,
-            staleness=0 if algo.on_policy else args.staleness,
-            num_microbatches=args.microbatch)
+        if args.engine == "async":
+            from repro.async_rl.orchestrator import AsyncOrchestrator
+            from repro.training.trainer import Trainer
+            orch = AsyncOrchestrator(
+                cfg, rl, task, algo, n_prompts=8, max_new_tokens=6,
+                use_control_plane=True)
+            state = Trainer(cfg, rl, algo).init_state(
+                jax.random.PRNGKey(7))
+            state, recs = orch.run(state, args.steps, run_logger=log)
+        else:
+            state, recs = simulate_async(
+                cfg, rl, task, algo, args.steps, n_prompts=8,
+                max_new_tokens=6,
+                staleness=0 if algo.on_policy else args.staleness,
+                num_microbatches=args.microbatch, run_logger=log)
     for r in recs[:: max(1, len(recs) // 8)]:
-        print(f"  step {r.step:3d} reward {r.reward:.3f} loss {r.loss:+.4f} "
-              f"prox {r.prox_time_s*1e3:.2f}ms stale {r.staleness_mean:.1f} "
-              f"tok/s {r.train_tokens / max(r.train_time_s, 1e-9):.0f} "
-              f"syncs {r.host_syncs:.0f}")
+        log.print(
+            f"  step {r.step:3d} reward {r.reward:.3f} loss {r.loss:+.4f} "
+            f"prox {r.prox_time_s*1e3:.2f}ms stale {r.staleness_mean:.1f} "
+            f"tok/s {r.train_tokens / max(r.train_time_s, 1e-9):.0f} "
+            f"syncs {r.host_syncs:.0f}")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, {"params": state.params},
                         {"arch": args.arch, "algo": algo.name,
                          "steps": args.steps})
-        print("saved", args.checkpoint)
+        log.print(f"saved {args.checkpoint}")
+        log.log_event("checkpoint", path=args.checkpoint)
+    if tracer is not None:
+        install_tracer(None)
+        tracer.export(args.trace)
+        log.print(f"trace -> {args.trace}")
+    if args.metrics_prom:
+        get_registry().dump_prometheus(args.metrics_prom)
+        log.print(f"prometheus metrics -> {args.metrics_prom}")
+    log.close()
 
 
 if __name__ == "__main__":

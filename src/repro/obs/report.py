@@ -1,0 +1,159 @@
+"""Run-report CLI: summarize a run's JSONL log (+ optional trace.json).
+
+    python -m repro.obs.report --jsonl run.jsonl [--trace trace.json] \
+        [--json report.json]
+
+Renders (text, optionally machine-readable JSON):
+
+* step/reward/loss summary and wall-clock totals
+* per-phase time breakdown (rollout / prefill / decode / train / publish)
+  from the trace's canonical spans
+* the staleness distribution (from the last step's ``serving.*`` snapshot
+  when the control plane ran, else per-step ``staleness_mean``)
+* training + decode tokens/sec
+* the weight-publish timeline (span start times from the trace)
+
+This is the artifact future bench PRs commit alongside raw JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.obs.runlog import read_jsonl
+from repro.obs.tracing import phase_breakdown
+
+
+def _fmt_s(s: float) -> str:
+    return f"{s * 1e3:.1f}ms" if s < 1.0 else f"{s:.2f}s"
+
+
+def summarize(steps: List[Dict[str, Any]],
+              trace: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Aggregate step records (+ trace events) into a report dict."""
+    out: Dict[str, Any] = {"num_steps": len(steps)}
+    if not steps:
+        return out
+    last = steps[-1]
+    out["schema"] = last.get("schema")
+    out["wall_time_s"] = last.get("wall_time_s", 0.0)
+    out["final_reward"] = last.get("reward")
+    out["final_loss"] = last.get("loss")
+    n = len(steps)
+    out["mean_reward"] = sum(s.get("reward", 0.0) for s in steps) / n
+    out["mean_staleness"] = (
+        sum(s.get("staleness_mean", 0.0) for s in steps) / n)
+    train_t = sum(s.get("train_time_s", 0.0) for s in steps)
+    rollout_t = sum(s.get("rollout_time_s", 0.0) for s in steps)
+    prox_t = sum(s.get("prox_time_s", 0.0) for s in steps)
+    out["train_time_s"] = train_t
+    out["rollout_time_s"] = rollout_t
+    out["prox_time_s"] = prox_t
+    tokens = sum(s.get("train_tokens", 0.0) for s in steps)
+    out["train_tokens"] = tokens
+    out["train_tokens_per_s"] = tokens / train_t if train_t > 0 else 0.0
+    out["host_syncs_per_step"] = (
+        sum(s.get("host_syncs", 0.0) for s in steps) / n)
+
+    serving = last.get("serving")
+    if serving:
+        out["serving"] = {
+            "staleness": {k.split("staleness_", 1)[1]: v
+                          for k, v in serving.items()
+                          if k.startswith("staleness_")},
+            "decode_tokens_per_s": serving.get("decode_tokens_per_s"),
+            "prefix_hit_rate": serving.get("prefix_hit_rate"),
+            "interrupts": serving.get("interrupts"),
+            "resumed_sequences": serving.get("resumed_sequences"),
+        }
+
+    if trace is not None:
+        events = trace.get("traceEvents", [])
+        out["phases"] = phase_breakdown(events)
+        out["publish_timeline_s"] = [
+            round(ev["ts"] / 1e6, 6) for ev in events
+            if ev.get("ph") == "X" and ev.get("name") == "weight_publish"]
+        out["trace_events"] = len(events)
+    return out
+
+
+def render(report: Dict[str, Any]) -> str:
+    """Human-readable report text."""
+    lines: List[str] = []
+    n = report.get("num_steps", 0)
+    lines.append(f"run report — {n} steps, schema "
+                 f"{report.get('schema', '?')}")
+    if not n:
+        return "\n".join(lines)
+    lines.append(
+        f"  wall {_fmt_s(report['wall_time_s'])}  "
+        f"reward {report['mean_reward']:.3f} (final "
+        f"{report['final_reward']:.3f})  loss {report['final_loss']:+.4f}")
+    lines.append(
+        f"  train {_fmt_s(report['train_time_s'])} "
+        f"({report['train_tokens_per_s']:.0f} tok/s, "
+        f"{report['host_syncs_per_step']:.1f} syncs/step)  "
+        f"rollout {_fmt_s(report['rollout_time_s'])}  "
+        f"prox {_fmt_s(report['prox_time_s'])}")
+    lines.append(f"  staleness mean {report['mean_staleness']:.2f}")
+    srv = report.get("serving")
+    if srv:
+        st = srv.get("staleness", {})
+        if st:
+            lines.append(
+                "  staleness dist (serving): "
+                + "  ".join(f"{k}={st[k]:.2f}" for k in
+                            ("mean", "p50", "p99", "max") if k in st)
+                + f"  n={st.get('count', 0):.0f}")
+        lines.append(
+            f"  decode {srv.get('decode_tokens_per_s') or 0.0:.0f} tok/s  "
+            f"prefix-hit {(srv.get('prefix_hit_rate') or 0.0) * 100:.0f}%  "
+            f"interrupts {srv.get('interrupts') or 0:.0f} "
+            f"(resumed {srv.get('resumed_sequences') or 0:.0f} seqs)")
+    phases = report.get("phases")
+    if phases:
+        lines.append("  phase breakdown (trace):")
+        total = sum(p["total_s"] for p in phases.values()) or 1.0
+        for name in ("rollout", "prefill", "decode", "train", "publish"):
+            p = phases.get(name)
+            if p is None:
+                continue
+            lines.append(
+                f"    {name:8s} {_fmt_s(p['total_s']):>9s}  "
+                f"{100 * p['total_s'] / total:5.1f}%  "
+                f"x{p['count']:.0f} (mean {p['mean_ms']:.2f}ms)")
+    pubs = report.get("publish_timeline_s")
+    if pubs:
+        head = ", ".join(f"{t:.3f}" for t in pubs[:8])
+        more = f" … +{len(pubs) - 8}" if len(pubs) > 8 else ""
+        lines.append(f"  publishes at t(s): {head}{more}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize a run's JSONL log (+ optional trace.json)")
+    p.add_argument("--jsonl", required=True, help="run log (JSONL)")
+    p.add_argument("--trace", default=None, help="Chrome trace.json")
+    p.add_argument("--json", dest="json_out", default=None,
+                   help="also write the report as JSON to this path")
+    args = p.parse_args(argv)
+
+    steps = read_jsonl(args.jsonl, kind="step")
+    trace = None
+    if args.trace:
+        with open(args.trace) as f:
+            trace = json.load(f)
+    report = summarize(steps, trace)
+    print(render(report))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"report JSON -> {args.json_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

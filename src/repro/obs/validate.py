@@ -1,0 +1,100 @@
+"""CI schema gate: validate a run's JSONL log and trace.json.
+
+    python -m repro.obs.validate --jsonl run.jsonl [--trace trace.json] \
+        [--min-steps N] [--expect-span NAME ...]
+
+Fails (exit 1) when:
+* any JSONL step record is missing a required key or carries a schema
+  version other than ``RUNLOG_SCHEMA_VERSION`` (schema drift);
+* fewer than ``--min-steps`` step records were emitted;
+* the trace is not valid Chrome trace-event JSON (``traceEvents`` list of
+  events with ``ph``/``ts``), or an ``--expect-span`` name is absent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List, Optional
+
+from repro.obs.runlog import (
+    RUNLOG_SCHEMA_VERSION,
+    STEP_REQUIRED_KEYS,
+    read_jsonl,
+)
+
+
+def validate_jsonl(path: str, min_steps: int = 1) -> List[str]:
+    errors: List[str] = []
+    try:
+        steps = read_jsonl(path, kind="step")
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"jsonl unreadable: {e!r}"]
+    if len(steps) < min_steps:
+        errors.append(f"expected >= {min_steps} step records, "
+                      f"got {len(steps)}")
+    for i, rec in enumerate(steps):
+        if rec.get("schema") != RUNLOG_SCHEMA_VERSION:
+            errors.append(f"record {i}: schema {rec.get('schema')!r} != "
+                          f"{RUNLOG_SCHEMA_VERSION}")
+        missing = [k for k in STEP_REQUIRED_KEYS if k not in rec]
+        if missing:
+            errors.append(f"record {i}: missing keys {missing}")
+    return errors
+
+
+def validate_trace(path: str,
+                   expect_spans: Optional[List[str]] = None) -> List[str]:
+    errors: List[str] = []
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"trace unreadable: {e!r}"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["trace has no traceEvents list"]
+    for i, ev in enumerate(events):
+        if "ph" not in ev or "pid" not in ev:
+            errors.append(f"event {i}: missing ph/pid")
+            break
+        if ev["ph"] != "M" and "ts" not in ev:
+            errors.append(f"event {i} ({ev.get('name')}): missing ts")
+            break
+    names = {ev.get("name") for ev in events if ev.get("ph") == "X"}
+    for want in expect_spans or []:
+        if want not in names:
+            errors.append(f"expected span {want!r} absent "
+                          f"(have: {sorted(n for n in names if n)})")
+    return errors
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.obs.validate")
+    p.add_argument("--jsonl", default=None)
+    p.add_argument("--trace", default=None)
+    p.add_argument("--min-steps", type=int, default=1)
+    p.add_argument("--expect-span", action="append", default=[],
+                   help="span name that must appear in the trace "
+                        "(repeatable)")
+    args = p.parse_args(argv)
+    assert args.jsonl or args.trace, "nothing to validate"
+
+    errors: List[str] = []
+    if args.jsonl:
+        errors += [f"[jsonl] {e}"
+                   for e in validate_jsonl(args.jsonl, args.min_steps)]
+    if args.trace:
+        errors += [f"[trace] {e}"
+                   for e in validate_trace(args.trace, args.expect_span)]
+    if errors:
+        for e in errors:
+            print(f"VALIDATION FAILED: {e}")
+        return 1
+    print("obs validation OK"
+          + (f" — jsonl {args.jsonl}" if args.jsonl else "")
+          + (f" — trace {args.trace}" if args.trace else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,6 +29,7 @@ from repro.models.layers import (
     rmsnorm,
 )
 from repro.models.layers import swiglu
+from repro.obs.tracing import annotate, span
 from repro.rollout import paged_cache as pc
 from repro.rollout.sampler import (
     fused_sample_step,
@@ -436,6 +437,13 @@ class ContinuousBatchingEngine:
 
     def _prefill_into(self, params, slot: int, req: Request,
                       version: int = 0) -> None:
+        with span("prefill", slot=slot, prompt_tokens=len(req.prompt),
+                  version=version) as sp:
+            self._prefill_into_impl(params, slot, req, version)
+            sp.set(prefix_hit_tokens=req.prefix_hit_tokens)
+
+    def _prefill_into_impl(self, params, slot: int, req: Request,
+                           version: int = 0) -> None:
         P = len(req.prompt)
         bs = self.state.block_size
         matched: List[int] = []
@@ -562,6 +570,12 @@ class ContinuousBatchingEngine:
         pays one sampled-token drain per token. ``step_horizon`` amortizes
         that over a whole compiled horizon.
         """
+        with span("decode_step", version=version) as sp:
+            finished = self._step_impl(params, key, version)
+            sp.set(tokens=self.last_emitted, finished=len(finished))
+        return finished
+
+    def _step_impl(self, params, key, version: int = 0) -> List[Request]:
         if self.greedy:
             tokens, logps = greedy_token(self._next_logits)
         else:
@@ -619,6 +633,14 @@ class ContinuousBatchingEngine:
         later tokens with ``version`` (the params decoding this horizon),
         exactly as ``horizon`` per-token steps would stamp them.
         """
+        with span("decode_horizon", horizon=self.decode_horizon,
+                  version=version) as sp:
+            finished = self._step_horizon_impl(params, key, version)
+            sp.set(tokens=self.last_emitted, finished=len(finished))
+        return finished
+
+    def _step_horizon_impl(self, params, key,
+                           version: int = 0) -> List[Request]:
         H = self.decode_horizon
         active = {s: r for s, r in self.slots.items() if r is not None}
         if not active:
@@ -627,13 +649,14 @@ class ContinuousBatchingEngine:
         for s, r in active.items():
             budget[s] = min(H, r.max_new - len(r.generated))
         self._prepare_decode({s: int(budget[s]) for s in active})
-        packed, pool_k, pool_v, lens, logits = _paged_decode_horizon(
-            params, self.cfg, self.state.pool_k, self.state.pool_v,
-            self.state.block_tables, self.state.seq_lens,
-            self._next_logits, jnp.asarray(budget), key,
-            trash_block=self.trash_block, horizon=H,
-            temperature=self.rl.temperature, top_p=self.rl.top_p,
-            greedy=self.greedy)
+        with annotate("decode_horizon"):
+            packed, pool_k, pool_v, lens, logits = _paged_decode_horizon(
+                params, self.cfg, self.state.pool_k, self.state.pool_v,
+                self.state.block_tables, self.state.seq_lens,
+                self._next_logits, jnp.asarray(budget), key,
+                trash_block=self.trash_block, horizon=H,
+                temperature=self.rl.temperature, top_p=self.rl.top_p,
+                greedy=self.greedy)
         self.state = dataclasses.replace(self.state, pool_k=pool_k,
                                          pool_v=pool_v, seq_lens=lens)
         self._next_logits = logits

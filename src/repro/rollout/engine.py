@@ -19,6 +19,7 @@ from repro.configs.base import ModelConfig, RLConfig
 from repro.data import tokenizer as tok
 from repro.models import model as M
 from repro.models.layers import logits_from_hidden
+from repro.obs.tracing import annotate, span
 from repro.rollout.sampler import fused_sample_step
 
 
@@ -90,11 +91,14 @@ class RolloutEngine:
     def generate(self, params, prompts: np.ndarray,
                  prompt_lengths: np.ndarray, key, *, version: int = 0,
                  greedy: bool = False) -> RolloutBatch:
-        toks, logps, masks = _generate_jit(
-            params, self.cfg, jnp.asarray(prompts),
-            jnp.asarray(prompt_lengths), key, self.max_new_tokens,
-            self.rl.temperature, self.rl.top_p, greedy)
-        toks = np.asarray(toks)
+        with span("rollout_generate", batch=int(prompts.shape[0]),
+                  max_new=self.max_new_tokens, version=version), \
+                annotate("rollout_generate"):
+            toks, logps, masks = _generate_jit(
+                params, self.cfg, jnp.asarray(prompts),
+                jnp.asarray(prompt_lengths), key, self.max_new_tokens,
+                self.rl.temperature, self.rl.top_p, greedy)
+            toks = np.asarray(toks)
         B, P = prompts.shape
         full = np.concatenate([prompts, np.full_like(toks, tok.PAD)], axis=1)
         # place generated tokens right after each ragged prompt

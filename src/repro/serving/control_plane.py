@@ -26,6 +26,7 @@ import numpy as np
 from repro.async_rl.buffer import RolloutQueue
 from repro.async_rl.weights import WeightStore
 from repro.data import tokenizer as tok
+from repro.obs.tracing import flow_end, span
 from repro.rollout.continuous import ContinuousBatchingEngine, Request
 from repro.rollout.engine import RolloutBatch
 from repro.serving.interrupts import InterruptController
@@ -56,6 +57,7 @@ class ServingControlPlane:
         self._rid = 0
         self._finished: Dict[int, Request] = {}
         self.dropped_requests: List[Request] = []
+        self._last_seen_version = store.version
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -77,12 +79,23 @@ class ServingControlPlane:
 
     # ----------------------------------------------------------------- step
     def step(self, key) -> List[Request]:
+        with span("serve_step") as sp:
+            return self._step(key, sp)
+
+    def _step(self, key, sp) -> List[Request]:
         now = time.perf_counter()
         inflight = self.n_inflight
         params, version, interrupted = self.interrupts.poll(inflight)
+        if version != self._last_seen_version:
+            # close the publish->resume flow arrow: this serving step is
+            # the first to decode under the freshly published weights
+            # (whether or not work was in flight when the publish landed)
+            flow_end("publish", version, resumed=inflight)
+            self._last_seen_version = version
         if interrupted and inflight:
             self.metrics.interrupts += 1
             self.metrics.resumed_sequences += inflight
+            sp.set(resumed_under_version=version, resumed=inflight)
 
         # staleness-budget preemption of in-flight work
         for slot in self.scheduler.check_preempt(self.engine.slots, version):
@@ -146,6 +159,15 @@ class ServingControlPlane:
             self.metrics.page_utilization.observe(
                 1.0 - alloc.n_free / max(alloc.n_blocks, 1))
             self.metrics.cow_forks = alloc.forks
+        if finished:
+            # per-span staleness attributes: distribution of the batch of
+            # sequences that completed inside this serving step
+            d_all = [version - v for r in finished
+                     for v in r.token_versions]
+            sp.set(finished=len(finished), version=version,
+                   staleness_max=max(d_all, default=0),
+                   staleness_mean=(sum(d_all) / len(d_all)
+                                   if d_all else 0.0))
         for req in finished:
             self._finished[req.rid] = req
             self.metrics.observe_finished(
@@ -164,6 +186,13 @@ class ServingControlPlane:
         (sequences resume, stamps record the boundary) instead of being
         serialized against generation.
         """
+        B = prompts.shape[0]
+        with span("serve_generate", batch=B, max_new=max_new):
+            return self._generate_batch(prompts, prompt_lengths, key,
+                                        max_new, priority, max_steps)
+
+    def _generate_batch(self, prompts, prompt_lengths, key, max_new: int,
+                        priority: int, max_steps: int) -> RolloutBatch:
         B = prompts.shape[0]
         rids = []
         for i in range(B):

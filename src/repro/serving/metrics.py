@@ -1,63 +1,30 @@
-"""Serving-side observability: counters + histograms for the control plane.
+"""Serving-side observability: a thin facade over the obs metrics registry.
+
+The counters + histograms themselves now live in ``repro.obs.metrics``
+(the process-wide registry the training engine and benchmarks also
+publish into). ``ServingMetrics`` keeps its original mutable-dataclass
+surface — every control-plane call site (``metrics.interrupts += 1``,
+``metrics.staleness.observe(d)``, ...) is unchanged — but on construction
+it registers its histograms and callback gauges for its scalar fields
+under the ``serving_*`` namespace, so ``obs.get_registry().snapshot()``
+and the prometheus dump see live serving state.
+
+``ServingMetrics.snapshot()`` still flattens into the plain dict the
+orchestrator attaches to ``StepRecord.serving`` — same keys as ever; the
+histogram quantile estimates now interpolate within the winning bucket
+(see ``obs.metrics.Histogram``).
 
 Everything here is host-side and allocation-free on the hot path (fixed
-bucket arrays, float adds). ``ServingMetrics.snapshot()`` flattens into the
-plain dict the orchestrator attaches to ``StepRecord.serving``, so the
-staleness distribution, prefix-cache hit rate, queue delay, page
-utilization, and interrupt counts ride along with every training step's
-record.
+bucket arrays, float adds).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict
 
+from repro.obs.metrics import Histogram, get_registry
 
-class Histogram:
-    """Fixed-bucket histogram (prometheus-style cumulative-free buckets)."""
-
-    def __init__(self, bounds: Sequence[float]):
-        self.bounds = tuple(bounds)
-        self.counts = [0] * (len(self.bounds) + 1)  # last = +inf overflow
-        self.total = 0
-        self.sum = 0.0
-        self.max = 0.0
-
-    def observe(self, x: float) -> None:
-        i = 0
-        for b in self.bounds:
-            if x <= b:
-                break
-            i += 1
-        self.counts[i] += 1
-        self.total += 1
-        self.sum += x
-        self.max = max(self.max, x)
-
-    @property
-    def mean(self) -> float:
-        return self.sum / self.total if self.total else 0.0
-
-    def quantile(self, q: float) -> float:
-        """Bucket-upper-bound quantile estimate (0 < q <= 1)."""
-        if not self.total:
-            return 0.0
-        target = q * self.total
-        seen = 0
-        for i, c in enumerate(self.counts):
-            seen += c
-            if seen >= target:
-                return self.bounds[i] if i < len(self.bounds) else self.max
-        return self.max
-
-    def snapshot(self, prefix: str) -> Dict[str, float]:
-        return {
-            f"{prefix}_mean": self.mean,
-            f"{prefix}_p50": self.quantile(0.5),
-            f"{prefix}_p99": self.quantile(0.99),
-            f"{prefix}_max": self.max,
-            f"{prefix}_count": float(self.total),
-        }
+__all__ = ["Histogram", "ServingMetrics"]
 
 
 def _staleness_hist() -> Histogram:
@@ -72,9 +39,24 @@ def _util_hist() -> Histogram:
     return Histogram((0.1, 0.25, 0.5, 0.75, 0.9, 1.0))
 
 
+# scalar fields mirrored into the registry as callback gauges
+_SCALAR_FIELDS = (
+    "prefix_hit_tokens", "prefix_prompt_tokens", "prefill_tokens_computed",
+    "decode_tokens", "decode_host_syncs", "decode_launches",
+    "decode_time_s", "interrupts", "resumed_sequences", "preemptions",
+    "drops", "admitted", "completed", "cow_forks",
+)
+_DERIVED_FIELDS = ("prefix_hit_rate", "host_syncs_per_token",
+                   "decode_tokens_per_s")
+
+
 @dataclasses.dataclass
 class ServingMetrics:
-    """Control-plane counters; one instance per ServingControlPlane."""
+    """Control-plane counters; one instance per ServingControlPlane.
+
+    A fresh instance re-registers the ``serving_*`` names (latest control
+    plane wins — the registry reflects the live serving engine).
+    """
 
     staleness: Histogram = dataclasses.field(default_factory=_staleness_hist)
     queue_delay_s: Histogram = dataclasses.field(default_factory=_delay_hist)
@@ -98,6 +80,23 @@ class ServingMetrics:
     admitted: int = 0
     completed: int = 0
     cow_forks: int = 0
+    register: dataclasses.InitVar[bool] = True
+
+    def __post_init__(self, register: bool = True) -> None:
+        if register:
+            self.register_into(get_registry())
+
+    def register_into(self, registry) -> None:
+        """Expose this instance's state through a metrics registry:
+        histograms are adopted as-is, scalar + derived fields become
+        callback gauges reading the live attributes."""
+        registry.register("serving_staleness", self.staleness)
+        registry.register("serving_queue_delay_s", self.queue_delay_s)
+        registry.register("serving_page_utilization", self.page_utilization)
+        for f in _SCALAR_FIELDS + _DERIVED_FIELDS:
+            registry.gauge(f"serving_{f}",
+                           fn=(lambda self=self, f=f:
+                               float(getattr(self, f))))
 
     @property
     def prefix_hit_rate(self) -> float:

@@ -42,6 +42,8 @@ from repro.distributed.sharding import constrain, current_env
 from repro.kernels.logprob import token_logprob_entropy
 from repro.models import model as M
 from repro.models.layers import output_head_weight
+from repro.obs.metrics import get_registry
+from repro.obs.tracing import annotate, span
 from repro.rollout.engine import RolloutBatch
 from repro.training.optimizer import adam_init, adam_update
 
@@ -368,27 +370,55 @@ class Trainer:
         t0 = time.perf_counter()
         prox = None
         if self.algo.needs_prox_forward:
-            prox = recompute_prox_logp(state.params, self.cfg, batch.tokens)
-            prox.block_until_ready()
+            with span("prox_forward", algo=self.algo.name), \
+                    annotate("prox_forward"):
+                prox = recompute_prox_logp(state.params, self.cfg,
+                                           batch.tokens)
+                prox.block_until_ready()
             host_syncs += 1
         prox_time = time.perf_counter() - t0
 
-        step_fn = _train_step_donating if self.donate_params else _train_step
-        params, opt, packed = step_fn(
-            state.params, state.opt, state.version, batch.tokens,
-            batch.behav_logp, batch.response_mask, batch.versions,
-            batch.rewards, prox, cfg=self.cfg, rl=rl, algo=self.algo,
-            num_minibatches=nmb, num_microbatches=self.num_microbatches)
+        with span("train_update", algo=self.algo.name,
+                  batch=int(B), minibatches=int(nmb)), \
+                annotate("train_update"):
+            step_fn = (_train_step_donating if self.donate_params
+                       else _train_step)
+            params, opt, packed = step_fn(
+                state.params, state.opt, state.version, batch.tokens,
+                batch.behav_logp, batch.response_mask, batch.versions,
+                batch.rewards, prox, cfg=self.cfg, rl=rl, algo=self.algo,
+                num_minibatches=nmb,
+                num_microbatches=self.num_microbatches)
 
-        # the single device->host transfer of the step
-        values = jax.device_get(packed)
+            # the single device->host transfer of the step
+            values = jax.device_get(packed)
         host_syncs += 1
         out = {k: float(v) for k, v in zip(METRIC_KEYS, values)}
         out["prox_time_s"] = prox_time
         out["host_syncs"] = float(host_syncs)
         self.last_host_syncs = host_syncs
+        self._publish_metrics(out)
         new_state = TrainState(params, opt, state.version + 1)
         return new_state, out
+
+    # training-side metrics mirrored into the process-wide obs registry
+    # (gauges: latest step's value; counters: lifetime accumulation), so
+    # one ``registry.snapshot()`` / prometheus dump covers trainer state
+    # alongside the serving facade.
+    _GAUGE_KEYS = ("loss", "reward_mean", "entropy", "grad_norm",
+                   "iw_max", "iw_min", "iw_mean", "kl", "clipped_frac",
+                   "ratio_mean", "staleness_mean", "prox_time_s")
+    _COUNTER_KEYS = ("tokens", "clipped_tokens", "host_syncs")
+
+    def _publish_metrics(self, out: Dict[str, float]) -> None:
+        reg = get_registry()
+        for k in self._GAUGE_KEYS:
+            if k in out:
+                reg.gauge(f"train_{k}").set(out[k])
+        for k in self._COUNTER_KEYS:
+            if k in out:
+                reg.counter(f"train_{k}_total").inc(out[k])
+        reg.counter("train_steps_total").inc()
 
 
 # ----------------------------------------------------------------- SFT warmup

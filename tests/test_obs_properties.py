@@ -1,0 +1,62 @@
+"""Property-based tests (hypothesis) for the obs histogram.
+
+Invariants:
+1. ``quantile`` is bounded by the observed data range and monotone in q.
+2. ``max`` equals the true maximum (including all-negative data).
+3. ``merge`` is equivalent to observing the union of both streams.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.obs.metrics import Histogram
+
+BOUNDS = (0.0, 0.5, 1.0, 2.0, 4.0, 8.0)
+values = st.lists(st.floats(min_value=-16.0, max_value=16.0,
+                            allow_nan=False), min_size=1, max_size=64)
+quantiles = st.floats(min_value=0.01, max_value=1.0)
+
+
+def _hist(vals):
+    h = Histogram(BOUNDS)
+    for v in vals:
+        h.observe(v)
+    return h
+
+
+@settings(max_examples=80, deadline=None)
+@given(values, quantiles)
+def test_quantile_bounded_by_data_range(vals, q):
+    h = _hist(vals)
+    lo = min(min(vals), 0.0)  # first bucket lower bound is min(0, b0)
+    hi = max(max(vals), BOUNDS[-1]) + 1e-9
+    est = h.quantile(q)
+    assert lo - 1e-9 <= est <= hi, (est, lo, hi)
+
+
+@settings(max_examples=80, deadline=None)
+@given(values, quantiles, quantiles)
+def test_quantile_monotone(vals, q1, q2):
+    h = _hist(vals)
+    lo, hi = sorted((q1, q2))
+    assert h.quantile(lo) <= h.quantile(hi) + 1e-9
+
+
+@settings(max_examples=80, deadline=None)
+@given(values)
+def test_max_is_true_max(vals):
+    assert _hist(vals).max == pytest.approx(max(vals))
+
+
+@settings(max_examples=80, deadline=None)
+@given(values, values)
+def test_merge_equals_union(a, b):
+    merged = _hist(a).merge(_hist(b))
+    union = _hist(a + b)
+    assert merged.counts == union.counts
+    assert merged.total == union.total
+    assert merged.sum == pytest.approx(union.sum)
+    assert merged.max == pytest.approx(union.max)
+    for q in (0.25, 0.5, 0.9, 0.99):
+        assert merged.quantile(q) == pytest.approx(union.quantile(q))
