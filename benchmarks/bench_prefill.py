@@ -1,0 +1,154 @@
+"""Prefill-path latency: inline dense whole-sequence prefill vs the
+chunked, budgeted prefill lane.
+
+A mixed long/short workload is served through the full control plane
+(admission queue -> prefill lane -> decode lane). The dense baseline
+prefills each admitted prompt inline and whole, so a long prompt stalls
+the step — every co-admitted short request's first token waits behind
+it. The chunked lane streams prompts through fixed-shape, packed chunk
+launches under a per-step budget, so shorts prefill (and start decoding)
+between a long prompt's chunks.
+
+Reported per mode: time-to-first-token p50/p99 over all requests
+(submit -> first sampled token, wall clock), aggregate generated
+tokens/sec, and the prefill compile count (bucket-ladder effectiveness —
+stays ~#buckets, not ~#distinct prompt lengths). The committed
+``experiments/prefill_pipeline.json`` records the full run; the headline
+is the TTFT p99 ratio at equal aggregate throughput.
+
+Run directly (``python -m benchmarks.bench_prefill [--quick]``) or as
+the ``prefill`` section of ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import CsvOut, toy_config
+from repro.async_rl.weights import WeightStore
+from repro.models import model as M
+from repro.rollout.continuous import ContinuousBatchingEngine
+from repro.serving import (
+    AdmissionScheduler,
+    SchedulerConfig,
+    ServingControlPlane,
+)
+
+OUT_JSON = (pathlib.Path(__file__).resolve().parent.parent / "experiments"
+            / "prefill_pipeline.json")
+
+
+def _workload(cfg, *, n_short: int, n_long: int, short_len: int,
+              long_len: int, seed: int = 0) -> List[np.ndarray]:
+    """Interleaved long/short prompt mix (longs spread through the queue,
+    as in a serving trace — not front-loaded)."""
+    rng = np.random.default_rng(seed)
+    shorts = [rng.integers(4, cfg.vocab_size,
+                           size=int(rng.integers(short_len // 2,
+                                                 short_len + 1))
+                           ).astype(np.int32) for _ in range(n_short)]
+    longs = [rng.integers(4, cfg.vocab_size, size=long_len).astype(np.int32)
+             for _ in range(n_long)]
+    prompts = list(shorts)
+    stride = max(len(prompts) // (n_long + 1), 1)
+    for i, p in enumerate(longs):
+        prompts.insert(stride * (i + 1), p)
+    return prompts
+
+
+def _serve_run(cfg, params, *, mode: str, prompts: List[np.ndarray],
+               max_new: int, prefill_chunk: int, prefill_budget: int,
+               max_seqs: int) -> Dict[str, object]:
+    longest = max(len(p) for p in prompts)
+    mb = -(-(longest + max_new) // 8) + 1
+    eng = ContinuousBatchingEngine(
+        cfg, max_seqs=max_seqs, block_size=8,
+        n_blocks=max_seqs * mb + 1, max_blocks_per_seq=mb, greedy=True,
+        prefill_mode=mode, prefill_chunk=prefill_chunk)
+    cp = ServingControlPlane(
+        eng, WeightStore(params, 0),
+        AdmissionScheduler(SchedulerConfig(d_max=1_000)),
+        use_prefix_cache=False,  # random prompts: isolate the prefill path
+        prefill_budget=prefill_budget)
+    key = jax.random.PRNGKey(1)
+    t0 = time.perf_counter()
+    for p in prompts:  # t_submit stamps here: TTFT includes queueing
+        cp.submit(p, max_new=max_new)
+    finished = []
+    while len(finished) < len(prompts):
+        key, sub = jax.random.split(key)
+        finished.extend(cp.step(sub))
+    jax.block_until_ready(eng.state.pool_k)
+    dt = time.perf_counter() - t0
+    ttfts = np.array([r.t_first_token - r.t_submit for r in finished])
+    tokens = sum(len(r.generated) for r in finished)
+    return dict(seconds=dt, tokens=tokens, tokens_per_s=tokens / dt,
+                ttft_p50_ms=float(np.percentile(ttfts, 50)) * 1e3,
+                ttft_p99_ms=float(np.percentile(ttfts, 99)) * 1e3,
+                ttft_max_ms=float(ttfts.max()) * 1e3,
+                prefill_compiles=eng.prefill_compiles,
+                prefill_launches=eng.prefill_launches)
+
+
+def run(csv: CsvOut, *, quick: bool = False, save_json: bool = True) -> None:
+    cfg = toy_config()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if quick:
+        wl = dict(n_short=4, n_long=1, short_len=12, long_len=48)
+        max_new, max_seqs, chunk, repeats = 4, 4, 16, 1
+    else:
+        wl = dict(n_short=12, n_long=2, short_len=16, long_len=96)
+        max_new, max_seqs, chunk, repeats = 16, 4, 48, 3
+    prompts = _workload(cfg, **wl)
+    kw = dict(prompts=prompts, max_new=max_new, prefill_chunk=chunk,
+              prefill_budget=2, max_seqs=max_seqs)
+    modes = ("dense", "chunked")
+    for m in modes:  # warmup: compile every bucket outside the timed runs
+        _serve_run(cfg, params, mode=m, **kw)
+    # interleaved best-of-N (min wall time): noisy-neighbour CPU load hits
+    # both modes equally instead of biasing one window
+    best: Dict[str, Dict[str, object]] = {}
+    for _ in range(repeats):
+        for m in modes:
+            r = _serve_run(cfg, params, mode=m, **kw)
+            if m not in best or r["seconds"] < best[m]["seconds"]:
+                best[m] = r
+    rows = []
+    for m in modes:
+        r = dict(mode=m, **best[m])
+        r["ttft_p99_vs_dense"] = (best[m]["ttft_p99_ms"]
+                                  / best["dense"]["ttft_p99_ms"])
+        rows.append(r)
+        csv.add(f"prefill/{m}", r["seconds"] / r["tokens"],
+                derived=f"tok/s={r['tokens_per_s']:.0f} "
+                        f"ttft_p50={r['ttft_p50_ms']:.1f}ms "
+                        f"p99={r['ttft_p99_ms']:.1f}ms "
+                        f"compiles={r['prefill_compiles']}")
+    if save_json:
+        OUT_JSON.write_text(json.dumps(
+            {"bench": "prefill_pipeline", "max_new": max_new,
+             "max_seqs": max_seqs, "prefill_chunk": chunk,
+             "prefill_budget": 2, "workload": wl, "rows": rows},
+            indent=2) + "\n")
+        print(f"# wrote {OUT_JSON}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke: tiny workload, 1 repeat; does not "
+                        "overwrite the committed JSON")
+    args = p.parse_args()
+    csv = CsvOut()
+    csv.header()
+    run(csv, quick=args.quick, save_json=not args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@
                                   GRPO-style grouped prompts)
   decode  -> bench_decode        (serving: per-token vs fused-horizon
                                   decode tokens/sec + host syncs)
+  prefill -> bench_prefill       (serving: inline dense prefill vs the
+                                  chunked prefill lane — TTFT + tok/s)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -29,7 +31,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    choices=["fig1", "table1", "roofline", "kernels",
-                            "prefix", "decode"])
+                            "prefix", "decode", "prefill"])
     p.add_argument("--steps", type=int, default=30,
                    help="RL steps for the training bench")
     p.add_argument("--quick", action="store_true",
@@ -68,8 +70,9 @@ def main() -> None:
             import traceback
             traceback.print_exc()
 
-    from benchmarks import (bench_decode, bench_kernels, bench_prefix_cache,
-                            bench_prox_time, bench_roofline, bench_training)
+    from benchmarks import (bench_decode, bench_kernels, bench_prefill,
+                            bench_prefix_cache, bench_prox_time,
+                            bench_roofline, bench_training)
     section("fig1", lambda: bench_prox_time.run(csv))
     section("kernels", lambda: bench_kernels.run(csv), skip_quick=True)
     section("roofline", lambda: bench_roofline.run(csv), skip_quick=True)
@@ -78,6 +81,8 @@ def main() -> None:
     # overwrites the committed experiment JSON (PR 3 convention)
     section("decode", lambda: bench_decode.run(csv, quick=args.quick,
                                                save_json=not args.quick))
+    section("prefill", lambda: bench_prefill.run(csv, quick=args.quick,
+                                                 save_json=not args.quick))
     section("table1", lambda: bench_training.run(
         csv, num_steps=steps, sft_steps=sft_steps,
         save_json=not args.quick))

@@ -1,0 +1,5 @@
+"""Chunked paged prefill attention (segment-packed, block-table walk)."""
+from repro.kernels.prefill_attn.ops import paged_prefill_attention_op
+from repro.kernels.prefill_attn.ref import paged_prefill_attention_ref
+
+__all__ = ["paged_prefill_attention_op", "paged_prefill_attention_ref"]

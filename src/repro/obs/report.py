@@ -62,7 +62,11 @@ def summarize(steps: List[Dict[str, Any]],
             "staleness": {k.split("staleness_", 1)[1]: v
                           for k, v in serving.items()
                           if k.startswith("staleness_")},
+            "ttft_s": {k.split("ttft_s_", 1)[1]: v
+                       for k, v in serving.items()
+                       if k.startswith("ttft_s_")},
             "decode_tokens_per_s": serving.get("decode_tokens_per_s"),
+            "prefill_chunks": serving.get("prefill_chunks"),
             "prefix_hit_rate": serving.get("prefix_hit_rate"),
             "interrupts": serving.get("interrupts"),
             "resumed_sequences": serving.get("resumed_sequences"),
@@ -106,9 +110,17 @@ def render(report: Dict[str, Any]) -> str:
                 + "  ".join(f"{k}={st[k]:.2f}" for k in
                             ("mean", "p50", "p99", "max") if k in st)
                 + f"  n={st.get('count', 0):.0f}")
+        tt = srv.get("ttft_s", {})
+        if tt.get("count"):
+            lines.append(
+                "  ttft: "
+                + "  ".join(f"{k}={_fmt_s(tt[k])}" for k in
+                            ("mean", "p50", "p99", "max") if k in tt)
+                + f"  n={tt['count']:.0f}")
         lines.append(
             f"  decode {srv.get('decode_tokens_per_s') or 0.0:.0f} tok/s  "
             f"prefix-hit {(srv.get('prefix_hit_rate') or 0.0) * 100:.0f}%  "
+            f"prefill-chunks {srv.get('prefill_chunks') or 0:.0f}  "
             f"interrupts {srv.get('interrupts') or 0:.0f} "
             f"(resumed {srv.get('resumed_sequences') or 0:.0f} seqs)")
     phases = report.get("phases")

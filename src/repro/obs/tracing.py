@@ -308,6 +308,7 @@ PHASE_SPANS: Dict[str, str] = {
     "rollout_generate": "rollout",
     "serve_generate": "rollout",
     "prefill": "prefill",
+    "prefill_chunk": "prefill",
     "decode_step": "decode",
     "decode_horizon": "decode",
     "prox_forward": "train",

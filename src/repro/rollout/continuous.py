@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, RLConfig
 from repro.data import tokenizer as tok
 from repro.kernels.decode_attn.ops import paged_decode_attention_op
+from repro.kernels.prefill_attn.ops import paged_prefill_attention_op
 from repro.models import model as M
 from repro.models.attention import decode_attention
 from repro.models.layers import (
@@ -55,6 +56,17 @@ class Request:
     submit_version: int = 0      # weight version when the request arrived
     prefix_hit_tokens: int = 0   # prompt tokens served from the radix cache
     preempt_count: int = 0
+    # chunked-prefill cursor: prompt tokens whose K/V is resident in the
+    # paged pool (radix hits count). The slot only enters the decode
+    # horizon once prefill_done.
+    prefill_pos: int = 0
+    # time-to-first-token stamps (control-plane wall clock; -1 = unset)
+    t_submit: float = -1.0
+    t_first_token: float = -1.0
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= len(self.prompt)
 
     def min_version(self) -> int:
         return min(self.token_versions) if self.token_versions \
@@ -66,6 +78,7 @@ class Request:
         self.gen_logp = []
         self.token_versions = []
         self.done = False
+        self.prefill_pos = 0
 
 
 def _token_layer_stack(params, cfg: ModelConfig, lens, tokens, kv,
@@ -144,21 +157,122 @@ def _decode_tower(params, cfg: ModelConfig, pool_k, pool_v, block_tables,
     return logits, pool_k, pool_v
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",),
+@functools.partial(jax.jit, static_argnames=("cfg", "trash_block"),
                    donate_argnames=("pool_k", "pool_v"))
 def _paged_decode_step(params, cfg: ModelConfig, pool_k, pool_v,
-                       block_tables, seq_lens, tokens):
+                       block_tables, seq_lens, tokens, active, *,
+                       trash_block: int = 0):
     """One token for every slot against the paged pool.
 
-    tokens: [S_max]; returns (logits [S_max, V], pool_k, pool_v).
+    tokens: [S_max]; active: [S_max] bool — inactive slots (idle, or
+    mid-prefill with live pages at their cursor) have their K/V append
+    redirected to the scratch block so a batch-wide launch can never
+    corrupt pages it doesn't own. Returns (logits [S_max, V], pool_k,
+    pool_v).
     """
     bs = pool_k.shape[2]
     safe_tables = jnp.maximum(block_tables, 0)
     blk_idx = seq_lens // bs
     write_block = jnp.take_along_axis(safe_tables, blk_idx[:, None],
                                       axis=1)[:, 0]
+    write_block = jnp.where(active, write_block, trash_block)
+    offset = jnp.where(active, seq_lens % bs, 0)
     return _decode_tower(params, cfg, pool_k, pool_v, block_tables,
-                         seq_lens, tokens, write_block, seq_lens % bs)
+                         seq_lens, tokens, write_block, offset)
+
+
+def _prefill_tower(params, cfg: ModelConfig, pool_k, pool_v, block_tables,
+                   seg_ids, q_pos, kv_lens, tokens, write_block, offset):
+    """Chunk-of-tokens layer stack over the paged pool.
+
+    The chunk's ``C`` rows are virtual decode slots: the same
+    ``_token_layer_stack`` runs with per-row positions ``q_pos``, each
+    layer scatters the chunk's K/V into pool pages at ``(write_block,
+    offset)`` in ONE dispatch (padding rows land on scratch), and
+    attention walks each row's slot block table via
+    ``paged_prefill_attention_op`` — so the per-row math is identical to
+    the decode tower and no dense [L, P, KV, hd] intermediate ever
+    exists. Returns (logits [C, V], pool_k, pool_v).
+    """
+    def append_attend(li, q, k, v, kv):
+        pool_k, pool_v = kv
+        pool_k = pool_k.at[li, write_block, offset].set(
+            k.astype(pool_k.dtype))
+        pool_v = pool_v.at[li, write_block, offset].set(
+            v.astype(pool_v.dtype))
+        o = paged_prefill_attention_op(q, pool_k[li], pool_v[li],
+                                       block_tables, seg_ids, q_pos,
+                                       kv_lens)
+        return o, (pool_k, pool_v)
+
+    logits, (pool_k, pool_v) = _token_layer_stack(
+        params, cfg, q_pos, tokens, (pool_k, pool_v), append_attend)
+    return logits, pool_k, pool_v
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "trash_block"),
+                   donate_argnames=("pool_k", "pool_v", "next_logits"))
+def _paged_prefill_chunk(params, cfg: ModelConfig, pool_k, pool_v,
+                         block_tables, seq_lens, next_logits, tokens,
+                         seg_ids, q_pos, kv_lens, last_rows, complete,
+                         seg_counts, *, trash_block: int):
+    """One fixed-shape prefill chunk: C prompt tokens, possibly spanning
+    several slots (segment-packed), written straight into pool pages.
+
+    tokens/seg_ids/q_pos: [C] (padding rows carry seg -1); kv_lens [S]
+    per-slot resident count *after* this chunk; last_rows/complete/
+    seg_counts: [S] — the chunk row holding each slot's final prompt
+    token (when ``complete``), whether the slot finishes its prompt here,
+    and how many rows belong to it. Completing slots get their
+    next-token logits installed; ``seq_lens`` advances by the rows
+    written. Compiles once per (C bucket, S) shape.
+    """
+    bs = pool_k.shape[2]
+    safe_tables = jnp.maximum(block_tables, 0)
+    row_tables = safe_tables[jnp.maximum(seg_ids, 0)]        # [C, mb]
+    blk_idx = jnp.minimum(q_pos // bs, row_tables.shape[1] - 1)
+    wb = jnp.take_along_axis(row_tables, blk_idx[:, None], axis=1)[:, 0]
+    wb = jnp.where(seg_ids >= 0, wb, trash_block)
+    off = jnp.where(seg_ids >= 0, q_pos % bs, 0)
+    logits, pool_k, pool_v = _prefill_tower(
+        params, cfg, pool_k, pool_v, block_tables, seg_ids, q_pos, kv_lens,
+        tokens, wb, off)
+    sel = logits[jnp.maximum(last_rows, 0)]                  # [S, V]
+    next_logits = jnp.where(complete[:, None],
+                            sel.astype(next_logits.dtype), next_logits)
+    return next_logits, pool_k, pool_v, seq_lens + seg_counts
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "trash_block"),
+                   donate_argnames=("pool_k", "pool_v"))
+def _dense_prefill(params, cfg: ModelConfig, pool_k, pool_v, tokens,
+                   length, table, *, trash_block: int):
+    """Whole-sequence dense prefill into pool pages, one scatter.
+
+    tokens [1, Pb] right-padded to a chunk-ladder bucket (so the compile
+    shape is the bucket, not the prompt length); length: true prompt
+    length; table [max_blocks] this slot's block table. Returns
+    (next-token logits [V], pool_k, pool_v) — the K/V of all Pb
+    positions lands in the pool via a single batched scatter (padding
+    positions on the scratch block) instead of a host loop of per-block
+    copies.
+    """
+    Pb = tokens.shape[1]
+    bs = pool_k.shape[2]
+    hidden, cache = M.prefill(params, cfg, tokens,
+                              lengths=length[None], max_len=Pb)
+    k = cache["attn"]["k"][:, 0]  # [L, Pb, KV, hd]
+    v = cache["attn"]["v"][:, 0]
+    pos = jnp.arange(Pb)
+    blk_idx = jnp.minimum(pos // bs, table.shape[0] - 1)
+    phys = jnp.where(pos < length, jnp.maximum(table, 0)[blk_idx],
+                     trash_block)
+    off = jnp.where(pos < length, pos % bs, 0)
+    pool_k = pool_k.at[:, phys, off].set(k.astype(pool_k.dtype))
+    pool_v = pool_v.at[:, phys, off].set(v.astype(pool_v.dtype))
+    h_last = jnp.take(hidden[0], length - 1, axis=0)
+    logits = logits_from_hidden(params["embedding"], h_last[None], cfg)[0]
+    return logits, pool_k, pool_v
 
 
 def _decode_tower_view(params, cfg: ModelConfig, view_k, view_v, lens,
@@ -306,12 +420,26 @@ class ContinuousBatchingEngine:
                  block_size: int = 16, n_blocks: int = 256,
                  max_blocks_per_seq: int = 16,
                  rl: Optional[RLConfig] = None, greedy: bool = False,
-                 prefix_cache=None, decode_horizon: int = 1):
+                 prefix_cache=None, decode_horizon: int = 1,
+                 prefill_chunk: int = 32, prefill_mode: str = "chunked"):
         assert cfg.arch_type in ("dense",), "paged serving: dense archs"
+        assert prefill_mode in ("chunked", "dense"), prefill_mode
         self.cfg = cfg
         self.rl = rl or RLConfig()
         self.greedy = greedy
         self.max_seqs = max_seqs
+        # prefill lane: prompts stream through fixed-shape chunk launches
+        # of at most ``prefill_chunk`` tokens (short prompts packed
+        # together, long prompts resumable via Request.prefill_pos).
+        # Launches are padded up the bucket ladder so the chunk step
+        # compiles once per bucket, not once per prompt length.
+        # ``prefill_mode="dense"`` keeps the legacy inline whole-sequence
+        # path (the bench baseline), itself bucket-padded.
+        self.prefill_mode = prefill_mode
+        self.prefill_chunk = int(prefill_chunk)
+        self._chunk_buckets = tuple(sorted(
+            {max(8, self.prefill_chunk // 4),
+             max(8, self.prefill_chunk // 2), self.prefill_chunk}))
         # tokens decoded per compiled launch: 1 = the per-token fallback
         # (step), >1 = the fused horizon (step_horizon) — host bookkeeping
         # then runs only at horizon boundaries. Callers that observe
@@ -356,6 +484,13 @@ class ContinuousBatchingEngine:
         self.decode_launches = 0
         self.tokens_emitted = 0
         self.last_emitted = 0
+        # prefill-lane telemetry: chunk launches, prompt tokens computed
+        # through the chunk path, and distinct compile shapes seen (the
+        # cache-miss counter the bucket-ladder tests pin)
+        self.prefill_launches = 0
+        self.prefill_chunk_tokens = 0
+        self.prefill_compiles = 0
+        self._prefill_shapes: set = set()
 
     # ------------------------------------------------------------- requests
     def submit(self, prompt_ids, max_new: int = 16, *, priority: int = 0,
@@ -369,20 +504,23 @@ class ContinuousBatchingEngine:
     def _cache_plan(self, prompt) -> tuple:
         """(n_blocks, n_tokens) the radix cache will actually serve.
 
-        Returns (0, 0) when the match is too small to pay off: the cached
-        suffix path costs one full-width decode step per remaining prompt
-        token, so a tiny match on a long prompt would be far slower than
-        one dense prefill.
+        In dense mode, returns (0, 0) when the match is too small to pay
+        off: the legacy cached-suffix path costs one full-width decode
+        step per remaining prompt token, so a tiny match on a long prompt
+        would be far slower than one dense prefill. The chunked lane
+        replays a suffix in ceil(len/C) launches, so any match pays.
         """
         if self.prefix_cache is None:
             return 0, 0
         P = len(prompt)
         n_blocks, n_matched = self.prefix_cache.lookup(prompt,
                                                        max_tokens=P - 1)
-        suffix = (P - 1) - n_matched
-        if n_matched == 0 or suffix > max(2 * self.state.block_size,
-                                          (P - 1) // 2):
+        if n_matched == 0:
             return 0, 0
+        if self.prefill_mode != "chunked":
+            suffix = (P - 1) - n_matched
+            if suffix > max(2 * self.state.block_size, (P - 1) // 2):
+                return 0, 0
         return n_blocks, n_matched
 
     def blocks_needed(self, prompt, max_new: int) -> int:
@@ -410,6 +548,15 @@ class ContinuousBatchingEngine:
     def free_slots(self) -> List[int]:
         return [s for s, r in self.slots.items() if r is None]
 
+    def decode_ready_slots(self) -> List[int]:
+        """Slots whose prompt K/V is fully resident (decode-lane set)."""
+        return [s for s, r in self.slots.items()
+                if r is not None and r.prefill_done]
+
+    def prefilling_slots(self) -> List[int]:
+        return [s for s, r in self.slots.items()
+                if r is not None and not r.prefill_done]
+
     def _admit(self, params, version: int = 0) -> None:
         for slot in self.free_slots():
             if not self._pending:
@@ -422,12 +569,163 @@ class ContinuousBatchingEngine:
             self.admit_request(params, slot, nxt, version=version)
 
     def admit_request(self, params, slot: int, req: Request,
+                      version: int = 0, *, prefill: bool = True) -> None:
+        """Place ``req`` into ``slot`` (control-plane entry).
+
+        ``prefill=True`` (the legacy contract) leaves the slot fully
+        prefilled on return — inline for dense mode, by draining the
+        chunk lane for chunked mode. The control plane passes
+        ``prefill=False`` and streams chunks through ``prefill_step``
+        under its per-boundary budget instead, so a long prompt never
+        blocks the decode lane for its whole prefill.
+        """
+        assert self.slots[slot] is None, f"slot {slot} occupied"
+        if self.prefill_mode == "dense":
+            self.slots[slot] = req
+            self._prefill_into(params, slot, req, version=version)
+            req.prefill_pos = len(req.prompt)
+            self._sync_mirrors()
+            return
+        self.start_prefill(slot, req, version=version)
+        if prefill:
+            while not req.prefill_done:
+                self.prefill_step(params, version=version, max_chunks=1)
+
+    def start_prefill(self, slot: int, req: Request,
                       version: int = 0) -> None:
-        """Place ``req`` into ``slot`` and prefill (control-plane entry)."""
+        """Map pages for ``req`` (radix prefix included) without running
+        any prefill compute; chunk launches stream the rest."""
         assert self.slots[slot] is None, f"slot {slot} occupied"
         self.slots[slot] = req
-        self._prefill_into(params, slot, req, version=version)
+        P = len(req.prompt)
+        matched: List[int] = []
+        n_matched = 0
+        if self._cache_plan(req.prompt)[1]:
+            matched, n_matched = self.prefix_cache.match(req.prompt,
+                                                         max_tokens=P - 1)
+        if n_matched:
+            self.state = pc.map_sequence_prefixed(
+                self.state, self.allocator, slot, matched, n_matched,
+                P + req.max_new)
+        else:
+            self.state = pc.map_sequence(self.state, self.allocator, slot,
+                                         P + req.max_new)
+        req.prefix_hit_tokens = n_matched
+        req.prefill_pos = n_matched
+        self._logits_version[slot] = version
         self._sync_mirrors()
+
+    def prefill_step(self, params, version: int = 0,
+                     max_chunks: Optional[int] = None) -> int:
+        """Run up to ``max_chunks`` chunk launches over mid-prefill slots
+        (all of them when None); returns the number launched."""
+        launched = 0
+        while max_chunks is None or launched < max_chunks:
+            work = self._gather_prefill_work()
+            if not work:
+                break
+            self._prefill_chunk_launch(params, work, version)
+            launched += 1
+        return launched
+
+    def _gather_prefill_work(self) -> List[tuple]:
+        """Pack pending prompt tokens into one chunk: [(slot, start, n)].
+
+        Shortest-remaining-first, so short prompts reach their first
+        token fast even while a long prompt is streaming; the long
+        prompt takes whatever chunk capacity is left each launch, so it
+        still progresses every boundary.
+        """
+        order = sorted(
+            self.prefilling_slots(),
+            key=lambda s: (len(self.slots[s].prompt)
+                           - self.slots[s].prefill_pos, s))
+        work: List[tuple] = []
+        used = 0
+        for slot in order:
+            r = self.slots[slot]
+            take = min(len(r.prompt) - r.prefill_pos,
+                       self.prefill_chunk - used)
+            if take <= 0:
+                break
+            work.append((slot, r.prefill_pos, take))
+            used += take
+        return work
+
+    def _chunk_bucket(self, n: int) -> int:
+        """Smallest ladder bucket holding ``n`` tokens (n <= chunk)."""
+        for b in self._chunk_buckets:
+            if n <= b:
+                return b
+        return self.prefill_chunk
+
+    def _dense_bucket(self, n: int) -> int:
+        """Pad width for a dense whole-sequence prefill: the chunk ladder
+        below ``prefill_chunk``, whole chunks above it."""
+        if n <= self.prefill_chunk:
+            return self._chunk_bucket(n)
+        return -(-n // self.prefill_chunk) * self.prefill_chunk
+
+    def _note_compile(self, shape: tuple) -> None:
+        if shape not in self._prefill_shapes:
+            self._prefill_shapes.add(shape)
+            self.prefill_compiles += 1
+
+    def _prefill_chunk_launch(self, params, work: List[tuple],
+                              version: int) -> None:
+        """One segment-packed chunk launch over ``[(slot, start, n)]``."""
+        n_rows = sum(n for _, _, n in work)
+        bucket = self._chunk_bucket(n_rows)
+        tokens = np.full((bucket,), tok.PAD, np.int32)
+        seg = np.full((bucket,), -1, np.int32)
+        pos = np.zeros((bucket,), np.int32)
+        kv_lens = np.zeros((self.max_seqs,), np.int32)
+        last_rows = np.zeros((self.max_seqs,), np.int32)
+        complete = np.zeros((self.max_seqs,), bool)
+        seg_counts = np.zeros((self.max_seqs,), np.int32)
+        row = 0
+        for slot, start, n in work:
+            r = self.slots[slot]
+            tokens[row: row + n] = r.prompt[start: start + n]
+            seg[row: row + n] = slot
+            pos[row: row + n] = np.arange(start, start + n)
+            kv_lens[slot] = start + n
+            seg_counts[slot] = n
+            if start + n == len(r.prompt):
+                complete[slot] = True
+                last_rows[slot] = row + n - 1
+            row += n
+        with span("prefill_chunk", rows=n_rows, bucket=bucket,
+                  segments=len(work), version=version,
+                  completed=int(complete.sum())):
+            # fork the (possibly radix-shared) first write block of each
+            # slot, pre-map the rest, push the table mirror once
+            self._prepare_decode({slot: n for slot, _, n in work})
+            next_logits, pool_k, pool_v, seq_lens = _paged_prefill_chunk(
+                params, self.cfg, self.state.pool_k, self.state.pool_v,
+                self.state.block_tables, self.state.seq_lens,
+                self._next_logits, jnp.asarray(tokens), jnp.asarray(seg),
+                jnp.asarray(pos), jnp.asarray(kv_lens),
+                jnp.asarray(last_rows), jnp.asarray(complete),
+                jnp.asarray(seg_counts), trash_block=self.trash_block)
+        self._next_logits = next_logits
+        self.state = dataclasses.replace(self.state, pool_k=pool_k,
+                                         pool_v=pool_v, seq_lens=seq_lens)
+        self.prefill_launches += 1
+        self.prefill_chunk_tokens += n_rows
+        self._note_compile(("chunk", bucket))
+        bs = self.state.block_size
+        for slot, start, n in work:
+            r = self.slots[slot]
+            r.prefill_pos = start + n
+            self._lens[slot] += n
+            if r.prefill_done:
+                self._logits_version[slot] = version
+                if self.prefix_cache is not None:
+                    n_blocks = -(-len(r.prompt) // bs)
+                    self.prefix_cache.insert(
+                        r.prompt,
+                        [int(b) for b in self._tables[slot][:n_blocks]])
 
     def _sync_mirrors(self) -> None:
         """Refresh host mirrors from the device (admission/prefill only —
@@ -461,24 +759,22 @@ class ContinuousBatchingEngine:
         else:
             self.state = pc.map_sequence(self.state, self.allocator, slot,
                                          P + req.max_new)
-            toks = jnp.asarray(req.prompt)[None, :]
-            hidden, cache = M.prefill(params, self.cfg, toks, max_len=P)
-            # copy dense prefill K/V into this sequence's pages
-            table = np.asarray(self.state.block_tables[slot])
-            k = cache["attn"]["k"][:, 0]  # [L, P, KV, hd]
-            v = cache["attn"]["v"][:, 0]
-            pool_k, pool_v = self.state.pool_k, self.state.pool_v
-            for start in range(0, P, bs):
-                blk = int(table[start // bs])
-                n = min(bs, P - start)
-                pool_k = pool_k.at[:, blk, :n].set(k[:, start:start + n])
-                pool_v = pool_v.at[:, blk, :n].set(v[:, start:start + n])
+            # pad to the chunk-bucket ladder (compile per bucket, not per
+            # prompt length) and scatter all K/V into pages in one jitted
+            # launch — no host block-copy loop
+            Pb = self._dense_bucket(P)
+            toks = np.full((1, Pb), tok.PAD, np.int32)
+            toks[0, :P] = req.prompt
+            logits, pool_k, pool_v = _dense_prefill(
+                params, self.cfg, self.state.pool_k, self.state.pool_v,
+                jnp.asarray(toks), jnp.asarray(P, jnp.int32),
+                self.state.block_tables[slot],
+                trash_block=self.trash_block)
+            self._note_compile(("dense", Pb))
             self.state = dataclasses.replace(
                 self.state, pool_k=pool_k, pool_v=pool_v,
                 seq_lens=self.state.seq_lens.at[slot].set(P))
-            logits = logits_from_hidden(params["embedding"], hidden[:, -1],
-                                        self.cfg)
-            self._next_logits = self._next_logits.at[slot].set(logits[0])
+            self._next_logits = self._next_logits.at[slot].set(logits)
         req.prefix_hit_tokens = n_matched
         if self.prefix_cache is not None:
             table = np.asarray(self.state.block_tables[slot])
@@ -509,9 +805,12 @@ class ContinuousBatchingEngine:
             lens = np.zeros((self.max_seqs,), np.int32)
             lens[slot] = int(self.state.seq_lens[slot])
             tokens = np.full((self.max_seqs,), int(t), np.int32)
+            one_hot = np.zeros((self.max_seqs,), bool)
+            one_hot[slot] = True
             logits, pool_k, pool_v = _paged_decode_step(
                 params, self.cfg, self.state.pool_k, self.state.pool_v,
-                jnp.asarray(bt), jnp.asarray(lens), jnp.asarray(tokens))
+                jnp.asarray(bt), jnp.asarray(lens), jnp.asarray(tokens),
+                jnp.asarray(one_hot), trash_block=self.trash_block)
             self.state = dataclasses.replace(
                 self.state, pool_k=pool_k, pool_v=pool_v,
                 seq_lens=self.state.seq_lens.at[slot].add(1))
@@ -576,6 +875,12 @@ class ContinuousBatchingEngine:
         return finished
 
     def _step_impl(self, params, key, version: int = 0) -> List[Request]:
+        # mid-prefill slots are not decode-ready: they have no sampled
+        # logits yet and their pages (possibly radix-shared) sit at the
+        # write cursor — they stay masked out of the launch entirely
+        active = self.decode_ready_slots()
+        if not active:
+            return []
         if self.greedy:
             tokens, logps = greedy_token(self._next_logits)
         else:
@@ -586,21 +891,24 @@ class ContinuousBatchingEngine:
         logps = np.asarray(logps)
         self.host_syncs += 2  # token + logp drains, one per token decoded
         self.decode_launches += 1
-        active = [s for s, r in self.slots.items() if r is not None]
         self._prepare_decode({slot: 1 for slot in active})
+        active_arr = np.zeros((self.max_seqs,), bool)
+        active_arr[active] = True
         logits, pool_k, pool_v = _paged_decode_step(
             params, self.cfg, self.state.pool_k, self.state.pool_v,
             self.state.block_tables, self.state.seq_lens,
-            jnp.asarray(tokens))
+            jnp.asarray(tokens), jnp.asarray(active_arr),
+            trash_block=self.trash_block)
+        # mid-prefill rows of _next_logits become garbage here, which is
+        # fine: they are only ever read after their completion chunk
+        # overwrites them (completion always precedes decode-readiness)
         self._next_logits = logits
         # bump all active lens with a single vectorized update
-        active_mask = np.zeros((self.max_seqs,), bool)
-        active_mask[active] = True
         self.state = dataclasses.replace(
             self.state, pool_k=pool_k, pool_v=pool_v,
             seq_lens=self.state.seq_lens
-            + jnp.asarray(active_mask, jnp.int32))
-        self._lens += active_mask
+            + jnp.asarray(active_arr, jnp.int32))
+        self._lens += active_arr
         self.last_emitted = len(active)
         self.tokens_emitted += len(active)
         finished: List[Request] = []
@@ -642,7 +950,10 @@ class ContinuousBatchingEngine:
     def _step_horizon_impl(self, params, key,
                            version: int = 0) -> List[Request]:
         H = self.decode_horizon
-        active = {s: r for s, r in self.slots.items() if r is not None}
+        # decode lane only: mid-prefill slots keep budget 0 (the scan's
+        # emit mask already parks zero-budget writes on scratch), and
+        # their garbage _next_logits rows are rewritten at completion
+        active = {s: self.slots[s] for s in self.decode_ready_slots()}
         if not active:
             return []
         budget = np.zeros((self.max_seqs,), np.int32)

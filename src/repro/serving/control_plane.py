@@ -41,9 +41,14 @@ class ServingControlPlane:
                  metrics: Optional[ServingMetrics] = None,
                  rollout_queue: Optional[RolloutQueue] = None,
                  use_prefix_cache: bool = True,
-                 resubmit_dropped: bool = True):
+                 resubmit_dropped: bool = True,
+                 prefill_budget: int = 2):
         self.engine = engine
         self.store = store
+        # prefill lane: at most this many chunk launches per step (horizon
+        # boundary), so admissions stream in without a long prompt ever
+        # stalling the decode lane for its whole prefill
+        self.prefill_budget = prefill_budget
         # explicit None check: an empty AdmissionScheduler is falsy (len 0)
         self.scheduler = AdmissionScheduler(SchedulerConfig()) \
             if scheduler is None else scheduler
@@ -73,8 +78,9 @@ class ServingControlPlane:
         self._rid += 1
         req = Request(self._rid, np.asarray(prompt), max_new,
                       priority=priority,
-                      submit_version=self.store.version)
-        self.scheduler.enqueue(req, time.perf_counter())
+                      submit_version=self.store.version,
+                      t_submit=time.perf_counter())
+        self.scheduler.enqueue(req, req.t_submit)
         return self._rid
 
     # ----------------------------------------------------------------- step
@@ -111,7 +117,10 @@ class ServingControlPlane:
             if picked is None:
                 break
             req, t_enq = picked
-            self.engine.admit_request(params, slot, req, version=version)
+            # chunked engines only map pages here; the prefill lane below
+            # streams the compute under the per-step chunk budget
+            self.engine.admit_request(params, slot, req, version=version,
+                                      prefill=False)
             self.metrics.observe_request(
                 prompt_tokens=len(req.prompt),
                 prefix_hit=req.prefix_hit_tokens,
@@ -133,12 +142,25 @@ class ServingControlPlane:
             else:
                 self.dropped_requests.append(req)
 
+        # prefill lane: stream up to prefill_budget chunk launches over
+        # mid-prefill slots. Slots whose prompt completes here enter the
+        # decode lane in this same step (first token with zero extra
+        # latency); longer prompts carry their cursor to the next
+        # boundary while the decode lane below keeps emitting.
+        if self.engine.prefilling_slots():
+            t0 = time.perf_counter()
+            launched = self.engine.prefill_step(
+                params, version=version, max_chunks=self.prefill_budget)
+            self.metrics.prefill_time_s += time.perf_counter() - t0
+            self.metrics.prefill_chunks += launched
+        self.metrics.prefill_compiles = self.engine.prefill_compiles
+
         finished: List[Request] = []
-        if self.n_inflight:
+        if self.engine.decode_ready_slots():
             # one decode launch: a fused horizon (decode_horizon tokens per
             # slot, one host drain) or the per-token fallback. Admission,
-            # preemption, and interrupt polling above all happen at this
-            # boundary — never inside the compiled loop.
+            # preemption, interrupt polling, and prefill chunks above all
+            # happen at this boundary — never inside the compiled loop.
             t0 = time.perf_counter()
             syncs0 = self.engine.host_syncs
             launches0 = self.engine.decode_launches
@@ -159,6 +181,16 @@ class ServingControlPlane:
             self.metrics.page_utilization.observe(
                 1.0 - alloc.n_free / max(alloc.n_blocks, 1))
             self.metrics.cow_forks = alloc.forks
+        # time-to-first-token: stamp requests whose first sampled token
+        # landed in this step's decode (finished ones already left their
+        # slots, so scan both)
+        t_now = time.perf_counter()
+        for r in list(self.engine.slots.values()) + finished:
+            if r is not None and r.generated and r.t_first_token < 0.0:
+                r.t_first_token = t_now
+                if r.t_submit >= 0.0:
+                    self.metrics.ttft_seconds.observe(
+                        r.t_first_token - r.t_submit)
         if finished:
             # per-span staleness attributes: distribution of the batch of
             # sequences that completed inside this serving step

@@ -39,15 +39,21 @@ def _util_hist() -> Histogram:
     return Histogram((0.1, 0.25, 0.5, 0.75, 0.9, 1.0))
 
 
+def _ttft_hist() -> Histogram:
+    return Histogram((0.001, 0.005, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+                      5.0, 30.0))
+
+
 # scalar fields mirrored into the registry as callback gauges
 _SCALAR_FIELDS = (
     "prefix_hit_tokens", "prefix_prompt_tokens", "prefill_tokens_computed",
-    "decode_tokens", "decode_host_syncs", "decode_launches",
-    "decode_time_s", "interrupts", "resumed_sequences", "preemptions",
-    "drops", "admitted", "completed", "cow_forks",
+    "prefill_chunks", "prefill_time_s",
+    "prefill_compiles", "decode_tokens", "decode_host_syncs",
+    "decode_launches", "decode_time_s", "interrupts", "resumed_sequences",
+    "preemptions", "drops", "admitted", "completed", "cow_forks",
 )
 _DERIVED_FIELDS = ("prefix_hit_rate", "host_syncs_per_token",
-                   "decode_tokens_per_s")
+                   "decode_tokens_per_s", "prefill_tokens_per_s")
 
 
 @dataclasses.dataclass
@@ -62,9 +68,17 @@ class ServingMetrics:
     queue_delay_s: Histogram = dataclasses.field(default_factory=_delay_hist)
     page_utilization: Histogram = dataclasses.field(
         default_factory=_util_hist)
+    # time-to-first-token: submit -> first sampled token, per request
+    ttft_seconds: Histogram = dataclasses.field(default_factory=_ttft_hist)
     prefix_hit_tokens: int = 0
     prefix_prompt_tokens: int = 0
     prefill_tokens_computed: int = 0
+    # prefill-lane telemetry: chunk launches streamed by the control
+    # plane, wall time inside them, and distinct compile shapes
+    # (bucket-ladder effectiveness: should stay ~#buckets, not ~#lengths)
+    prefill_chunks: int = 0
+    prefill_time_s: float = 0.0
+    prefill_compiles: int = 0
     decode_tokens: int = 0
     # fused-horizon serving telemetry: blocking device->host drains on the
     # decode path, compiled decode launches (one per horizon), and wall
@@ -93,6 +107,7 @@ class ServingMetrics:
         registry.register("serving_staleness", self.staleness)
         registry.register("serving_queue_delay_s", self.queue_delay_s)
         registry.register("serving_page_utilization", self.page_utilization)
+        registry.register("serving_ttft_seconds", self.ttft_seconds)
         for f in _SCALAR_FIELDS + _DERIVED_FIELDS:
             registry.gauge(f"serving_{f}",
                            fn=(lambda self=self, f=f:
@@ -114,6 +129,12 @@ class ServingMetrics:
             return 0.0
         return self.decode_tokens / self.decode_time_s
 
+    @property
+    def prefill_tokens_per_s(self) -> float:
+        if self.prefill_time_s <= 0.0:
+            return 0.0
+        return self.prefill_tokens_computed / self.prefill_time_s
+
     def observe_request(self, *, prompt_tokens: int, prefix_hit: int,
                         queue_delay_s: float) -> None:
         self.admitted += 1
@@ -132,10 +153,15 @@ class ServingMetrics:
         out.update(self.staleness.snapshot("staleness"))
         out.update(self.queue_delay_s.snapshot("queue_delay_s"))
         out.update(self.page_utilization.snapshot("page_util"))
+        out.update(self.ttft_seconds.snapshot("ttft_s"))
         out.update(
             prefix_hit_rate=self.prefix_hit_rate,
             prefix_hit_tokens=float(self.prefix_hit_tokens),
             prefill_tokens_computed=float(self.prefill_tokens_computed),
+            prefill_chunks=float(self.prefill_chunks),
+            prefill_time_s=self.prefill_time_s,
+            prefill_compiles=float(self.prefill_compiles),
+            prefill_tokens_per_s=self.prefill_tokens_per_s,
             decode_tokens=float(self.decode_tokens),
             decode_host_syncs=float(self.decode_host_syncs),
             decode_launches=float(self.decode_launches),

@@ -223,7 +223,11 @@ EXPECTED_SERVING_KEYS = {
     "queue_delay_s_max", "queue_delay_s_count",
     "page_util_mean", "page_util_p50", "page_util_p99", "page_util_max",
     "page_util_count",
+    "ttft_s_mean", "ttft_s_p50", "ttft_s_p99", "ttft_s_max",
+    "ttft_s_count",
     "prefix_hit_rate", "prefix_hit_tokens", "prefill_tokens_computed",
+    "prefill_chunks", "prefill_time_s", "prefill_compiles",
+    "prefill_tokens_per_s",
     "decode_tokens", "decode_host_syncs", "decode_launches",
     "decode_time_s", "host_syncs_per_token", "decode_tokens_per_s",
     "interrupts", "resumed_sequences", "preemptions", "drops",
