@@ -11,6 +11,8 @@
                                   decode tokens/sec + host syncs)
   prefill -> bench_prefill       (serving: inline dense prefill vs the
                                   chunked prefill lane — TTFT + tok/s)
+  load    -> bench_load          (serving: SLO-aware scheduling vs FIFO
+                                  under trace-driven overload)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -31,7 +33,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    choices=["fig1", "table1", "roofline", "kernels",
-                            "prefix", "decode", "prefill"])
+                            "prefix", "decode", "prefill", "load"])
     p.add_argument("--steps", type=int, default=30,
                    help="RL steps for the training bench")
     p.add_argument("--quick", action="store_true",
@@ -70,9 +72,10 @@ def main() -> None:
             import traceback
             traceback.print_exc()
 
-    from benchmarks import (bench_decode, bench_kernels, bench_prefill,
-                            bench_prefix_cache, bench_prox_time,
-                            bench_roofline, bench_training)
+    from benchmarks import (bench_decode, bench_kernels, bench_load,
+                            bench_prefill, bench_prefix_cache,
+                            bench_prox_time, bench_roofline,
+                            bench_training)
     section("fig1", lambda: bench_prox_time.run(csv))
     section("kernels", lambda: bench_kernels.run(csv), skip_quick=True)
     section("roofline", lambda: bench_roofline.run(csv), skip_quick=True)
@@ -83,6 +86,8 @@ def main() -> None:
                                                save_json=not args.quick))
     section("prefill", lambda: bench_prefill.run(csv, quick=args.quick,
                                                  save_json=not args.quick))
+    section("load", lambda: bench_load.run(csv, quick=args.quick,
+                                           save_json=not args.quick))
     section("table1", lambda: bench_training.run(
         csv, num_steps=steps, sft_steps=sft_steps,
         save_json=not args.quick))

@@ -1,0 +1,68 @@
+"""Trace-driven load harness demo: 2-class bursty overload, SLO vs FIFO.
+
+Synthesizes a bursty two-class workload (latency-critical ``chat`` vs
+best-effort ``batch``) that oversubscribes the engine's virtual capacity
+about 2x, then replays the *same* trace twice through the serving
+control plane on the virtual clock:
+
+* ``fifo`` — no priorities: chat requests queue behind batch bursts and
+  blow through their TTFT SLO;
+* ``slo`` — priority admission + deadline-aware shedding + overload
+  preemption: chat stays inside its SLO, batch absorbs the tail.
+
+Everything is deterministic (seeded trace + virtual clock), so the
+numbers printed here are reproducible to the last digit.
+
+Run: PYTHONPATH=src python examples/loadgen_trace.py
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.loadgen.harness import CostModel, run_trace
+from repro.loadgen.traces import SLOClass, TraceConfig, synthesize
+from repro.models import model as M
+from repro.obs.report import render_load
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--duration", type=float, default=2.5,
+                   help="trace length (virtual seconds)")
+    p.add_argument("--rate", type=float, default=14.0,
+                   help="mean arrivals/s (~2x virtual capacity)")
+    args = p.parse_args()
+
+    classes = (
+        SLOClass("chat", 0, ttft_slo_s=0.5, e2e_slo_s=4.0,
+                 share=0.35, max_new=8),
+        SLOClass("batch", 2, ttft_slo_s=6.0, e2e_slo_s=30.0,
+                 share=0.65, max_new=16),
+    )
+    trace = synthesize(TraceConfig(
+        seed=args.seed, duration_s=args.duration, rate_rps=args.rate,
+        burstiness=0.5, publish_every_s=1.0), classes)
+    print(f"trace: {len(trace.requests)} requests / "
+          f"{trace.duration_s:.1f}s, {len(trace.publishes)} publishes\n")
+
+    cfg = dataclasses.replace(get_config("toy-2m"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # inflated virtual costs: a small trace still queues like an
+    # overloaded production box
+    cost = CostModel(step_overhead_s=0.010, prefill_chunk_s=0.020,
+                     decode_token_s=0.010)
+
+    for policy in ("fifo", "slo"):
+        res = run_trace(cfg, params, trace, policy=policy, cost=cost,
+                        max_seqs=2)
+        print(render_load(res.summary))
+        print()
+
+    print("same trace, same engine — only the admission policy changed.")
+
+
+if __name__ == "__main__":
+    main()

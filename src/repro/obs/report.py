@@ -82,6 +82,50 @@ def summarize(steps: List[Dict[str, Any]],
     return out
 
 
+def render_load(summary: Dict[str, Any]) -> str:
+    """Per-class SLO table for a ``kind="load_summary"`` record (the
+    loadgen harness's run summary)."""
+    lines: List[str] = []
+    lines.append(
+        f"load harness — policy {summary.get('policy', '?')}: "
+        f"{summary.get('requests', 0)} requests over "
+        f"{summary.get('virtual_time_s', 0.0):.2f}s virtual "
+        f"({summary.get('completed', 0)} done, "
+        f"{summary.get('dropped', 0)} dropped, "
+        f"{summary.get('publishes', 0)} publishes)")
+    classes = summary.get("classes") or {}
+    slo = summary.get("slo") or {}
+    if classes:
+        lines.append(
+            f"  {'class':<12s} {'subm':>5s} {'done':>5s} {'shed':>5s} "
+            f"{'ttft_p50':>9s} {'ttft_p99':>9s} {'e2e_p99':>9s} "
+            f"{'slo%':>6s} {'goodput':>10s}")
+        for name, row in classes.items():
+            tgt = slo.get(name, {})
+            lines.append(
+                f"  {name:<12s} {row.get('submitted', 0):>5.0f} "
+                f"{row.get('completed', 0):>5.0f} "
+                f"{row.get('shed', 0):>5.0f} "
+                f"{_fmt_s(row.get('ttft_p50_s') or 0.0):>9s} "
+                f"{_fmt_s(row.get('ttft_p99_s') or 0.0):>9s} "
+                f"{_fmt_s(row.get('e2e_p99_s') or 0.0):>9s} "
+                f"{100 * (row.get('slo_attainment') or 0.0):>5.1f}% "
+                f"{row.get('goodput_tok_s') or 0.0:>6.1f} tok/s"
+                + (f"  (ttft slo {_fmt_s(tgt['ttft_slo_s'])})"
+                   if "ttft_slo_s" in tgt else ""))
+    srv = summary.get("serving") or {}
+    if srv:
+        lines.append(
+            "  drops: "
+            f"staleness {srv.get('drops_staleness_budget', 0):.0f}  "
+            f"max_preempts {srv.get('drops_max_preempts', 0):.0f}  "
+            f"slo_shed {srv.get('drops_slo_shed', 0):.0f}   "
+            "preempts: "
+            f"staleness {srv.get('preemptions_staleness', 0):.0f}  "
+            f"slo {srv.get('preemptions_slo', 0):.0f}")
+    return "\n".join(lines)
+
+
 def render(report: Dict[str, Any]) -> str:
     """Human-readable report text."""
     lines: List[str] = []
@@ -153,13 +197,20 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="also write the report as JSON to this path")
     args = p.parse_args(argv)
 
-    steps = read_jsonl(args.jsonl, kind="step")
+    records = read_jsonl(args.jsonl, kind=None)
+    steps = [r for r in records if r.get("kind") == "step"]
+    loads = [r for r in records if r.get("kind") == "load_summary"]
     trace = None
     if args.trace:
         with open(args.trace) as f:
             trace = json.load(f)
     report = summarize(steps, trace)
-    print(render(report))
+    if steps or not loads:
+        print(render(report))
+    if loads:
+        # loadgen runs: the per-class SLO table (latest summary wins)
+        print(render_load(loads[-1]))
+        report["load"] = loads[-1]
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(report, f, indent=2)

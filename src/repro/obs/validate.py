@@ -2,13 +2,18 @@
 
     python -m repro.obs.validate --jsonl run.jsonl [--trace trace.json] \
         [--min-steps N] [--expect-span NAME ...]
+    python -m repro.obs.validate --jsonl load_run.jsonl --loadgen \
+        [--min-requests N]
 
 Fails (exit 1) when:
 * any JSONL step record is missing a required key or carries a schema
   version other than ``RUNLOG_SCHEMA_VERSION`` (schema drift);
 * fewer than ``--min-steps`` step records were emitted;
 * the trace is not valid Chrome trace-event JSON (``traceEvents`` list of
-  events with ``ph``/``ts``), or an ``--expect-span`` name is absent.
+  events with ``ph``/``ts``), or an ``--expect-span`` name is absent;
+* with ``--loadgen``: a request-lifecycle record is missing a required
+  key, no ``load_summary`` record closes the run, or fewer than
+  ``--min-requests`` lifecycle records were emitted.
 """
 from __future__ import annotations
 
@@ -39,6 +44,41 @@ def validate_jsonl(path: str, min_steps: int = 1) -> List[str]:
         missing = [k for k in STEP_REQUIRED_KEYS if k not in rec]
         if missing:
             errors.append(f"record {i}: missing keys {missing}")
+    return errors
+
+
+def validate_loadgen_jsonl(path: str, min_requests: int = 1) -> List[str]:
+    """Schema-gate the load harness's lifecycle JSONL."""
+    from repro.loadgen.traces import (
+        LIFECYCLE_REQUIRED_KEYS,
+        SUMMARY_REQUIRED_KEYS,
+    )
+    errors: List[str] = []
+    try:
+        records = read_jsonl(path, kind=None)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"jsonl unreadable: {e!r}"]
+    reqs = [r for r in records if r.get("kind") == "request"]
+    summaries = [r for r in records if r.get("kind") == "load_summary"]
+    if len(reqs) < min_requests:
+        errors.append(f"expected >= {min_requests} request records, "
+                      f"got {len(reqs)}")
+    for i, rec in enumerate(reqs):
+        if rec.get("schema") != RUNLOG_SCHEMA_VERSION:
+            errors.append(f"request {i}: schema {rec.get('schema')!r} != "
+                          f"{RUNLOG_SCHEMA_VERSION}")
+        missing = [k for k in LIFECYCLE_REQUIRED_KEYS if k not in rec]
+        if missing:
+            errors.append(f"request {i}: missing keys {missing}")
+        if rec.get("outcome") not in ("done", "dropped"):
+            errors.append(f"request {i}: bad outcome "
+                          f"{rec.get('outcome')!r}")
+    if not summaries:
+        errors.append("no load_summary record")
+    for rec in summaries:
+        missing = [k for k in SUMMARY_REQUIRED_KEYS if k not in rec]
+        if missing:
+            errors.append(f"load_summary: missing keys {missing}")
     return errors
 
 
@@ -76,11 +116,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--expect-span", action="append", default=[],
                    help="span name that must appear in the trace "
                         "(repeatable)")
+    p.add_argument("--loadgen", action="store_true",
+                   help="validate load-harness lifecycle JSONL instead "
+                        "of step records")
+    p.add_argument("--min-requests", type=int, default=1)
     args = p.parse_args(argv)
     assert args.jsonl or args.trace, "nothing to validate"
 
     errors: List[str] = []
-    if args.jsonl:
+    if args.jsonl and args.loadgen:
+        errors += [f"[loadgen] {e}"
+                   for e in validate_loadgen_jsonl(args.jsonl,
+                                                   args.min_requests)]
+    elif args.jsonl:
         errors += [f"[jsonl] {e}"
                    for e in validate_jsonl(args.jsonl, args.min_steps)]
     if args.trace:

@@ -60,9 +60,17 @@ class Request:
     # paged pool (radix hits count). The slot only enters the decode
     # horizon once prefill_done.
     prefill_pos: int = 0
-    # time-to-first-token stamps (control-plane wall clock; -1 = unset)
+    # lifecycle stamps (control-plane clock — wall by default, virtual
+    # under the loadgen replay harness; -1 = unset)
     t_submit: float = -1.0
+    t_admit: float = -1.0
     t_first_token: float = -1.0
+    t_done: float = -1.0
+    # --- multi-tenant / SLO bookkeeping (loadgen harness) ----------------
+    tenant: str = ""
+    slo_class: str = ""          # SLO class name (stamped by SLO scheduler)
+    deadline_s: float = float("inf")  # absolute TTFT deadline (clock time)
+    drop_reason: str = ""        # staleness_budget | max_preempts | slo_shed
 
     @property
     def prefill_done(self) -> bool:
@@ -73,12 +81,18 @@ class Request:
             else self.submit_version
 
     def reset_generation(self) -> None:
-        """Discard sampled state for a fresh restart (preempt/resubmit)."""
+        """Discard sampled state for a fresh restart (preempt/resubmit).
+
+        The first-token stamp is cleared too: a restarted request lost
+        its partial generation, so the first token the caller actually
+        receives is the one after the restart (TTFT re-observes).
+        """
         self.generated = []
         self.gen_logp = []
         self.token_versions = []
         self.done = False
         self.prefill_pos = 0
+        self.t_first_token = -1.0
 
 
 def _token_layer_stack(params, cfg: ModelConfig, lens, tokens, kv,

@@ -18,7 +18,7 @@ cache, run one decode step, and fold everything into metrics.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -42,9 +42,15 @@ class ServingControlPlane:
                  rollout_queue: Optional[RolloutQueue] = None,
                  use_prefix_cache: bool = True,
                  resubmit_dropped: bool = True,
-                 prefill_budget: int = 2):
+                 prefill_budget: int = 2,
+                 clock: Optional[Callable[[], float]] = None):
         self.engine = engine
         self.store = store
+        # request-lifecycle clock: wall time by default; the loadgen
+        # replay harness injects a virtual clock so submit/admit/TTFT/done
+        # stamps (and hence SLO decisions) are trace-deterministic.
+        # Perf telemetry (decode_time_s etc.) always uses wall time.
+        self.clock = clock if clock is not None else time.perf_counter
         # prefill lane: at most this many chunk launches per step (horizon
         # boundary), so admissions stream in without a long prompt ever
         # stalling the decode lane for its whole prefill
@@ -74,12 +80,13 @@ class ServingControlPlane:
         return q.depth_fraction if q is not None else 0.0
 
     # ------------------------------------------------------------- requests
-    def submit(self, prompt, max_new: int = 16, priority: int = 0) -> int:
+    def submit(self, prompt, max_new: int = 16, priority: int = 0,
+               tenant: str = "") -> int:
         self._rid += 1
         req = Request(self._rid, np.asarray(prompt), max_new,
                       priority=priority,
                       submit_version=self.store.version,
-                      t_submit=time.perf_counter())
+                      t_submit=self.clock(), tenant=tenant)
         self.scheduler.enqueue(req, req.t_submit)
         return self._rid
 
@@ -89,7 +96,7 @@ class ServingControlPlane:
             return self._step(key, sp)
 
     def _step(self, key, sp) -> List[Request]:
-        now = time.perf_counter()
+        now = self.clock()
         inflight = self.n_inflight
         params, version, interrupted = self.interrupts.poll(inflight)
         if version != self._last_seen_version:
@@ -103,20 +110,33 @@ class ServingControlPlane:
             self.metrics.resumed_sequences += inflight
             sp.set(resumed_under_version=version, resumed=inflight)
 
-        # staleness-budget preemption of in-flight work
-        for slot in self.scheduler.check_preempt(self.engine.slots, version):
+        # preemption of in-flight work: staleness budget (base scheduler)
+        # and SLO-overload eviction (loadgen.slo scheduler), with the
+        # reason counted per class of decision
+        preempt_slots = self.scheduler.check_preempt(
+            self.engine.slots, version, now_s=now,
+            free_slots=len(self.engine.free_slots()))
+        for slot in preempt_slots:
             req = self.engine.release_slot(slot)
+            reason = self.scheduler.preempt_reasons.get(
+                slot, "staleness_budget")
             self.metrics.preemptions += 1
+            if reason == "slo_overload":
+                self.metrics.preemptions_slo += 1
+            else:
+                self.metrics.preemptions_staleness += 1
             self.scheduler.handle_preempted(req, version, now)
 
         # admission through the priority + backpressure + budget gates
         queue_frac = self._queue_frac()
         for slot in self.engine.free_slots():
             picked = self.scheduler.pop_admissible(
-                version, engine=self.engine, queue_frac=queue_frac)
+                version, engine=self.engine, queue_frac=queue_frac,
+                now_s=now)
             if picked is None:
                 break
             req, t_enq = picked
+            req.t_admit = now
             # chunked engines only map pages here; the prefill lane below
             # streams the compute under the per-step chunk budget
             self.engine.admit_request(params, slot, req, version=version,
@@ -126,10 +146,19 @@ class ServingControlPlane:
                 prefix_hit=req.prefix_hit_tokens,
                 queue_delay_s=max(now - t_enq, 0.0))
 
-        # budget-dropped queued requests: resubmit fresh, or surface
+        # dropped queued requests: resubmit fresh, or surface. SLO sheds
+        # are never resubmitted — the deadline they already missed does
+        # not reset, so a resubmit would shed again immediately.
         for req in self.scheduler.take_dropped():
+            reason = req.drop_reason or "staleness_budget"
             self.metrics.drops += 1
-            if self.resubmit_dropped:
+            if reason == "staleness_budget":
+                self.metrics.drops_staleness_budget += 1
+            elif reason == "max_preempts":
+                self.metrics.drops_max_preempts += 1
+            elif reason == "slo_shed":
+                self.metrics.drops_slo_shed += 1
+            if self.resubmit_dropped and reason != "slo_shed":
                 # fresh lease: discard any partial generation (its stamps
                 # are over budget and its tokens never see the new KV) and
                 # restart from the prompt. Churn is self-limiting: versions
@@ -137,9 +166,11 @@ class ServingControlPlane:
                 # trainer stops publishing and the restarts complete.
                 req.reset_generation()
                 req.preempt_count = 0
+                req.drop_reason = ""
                 req.submit_version = version
                 self.scheduler.enqueue(req, now)
             else:
+                req.t_done = now
                 self.dropped_requests.append(req)
 
         # prefill lane: stream up to prefill_budget chunk launches over
@@ -184,13 +215,15 @@ class ServingControlPlane:
         # time-to-first-token: stamp requests whose first sampled token
         # landed in this step's decode (finished ones already left their
         # slots, so scan both)
-        t_now = time.perf_counter()
+        t_now = self.clock()
         for r in list(self.engine.slots.values()) + finished:
             if r is not None and r.generated and r.t_first_token < 0.0:
                 r.t_first_token = t_now
                 if r.t_submit >= 0.0:
                     self.metrics.ttft_seconds.observe(
                         r.t_first_token - r.t_submit)
+        for r in finished:
+            r.t_done = t_now
         if finished:
             # per-span staleness attributes: distribution of the batch of
             # sequences that completed inside this serving step

@@ -50,7 +50,9 @@ _SCALAR_FIELDS = (
     "prefill_chunks", "prefill_time_s",
     "prefill_compiles", "decode_tokens", "decode_host_syncs",
     "decode_launches", "decode_time_s", "interrupts", "resumed_sequences",
-    "preemptions", "drops", "admitted", "completed", "cow_forks",
+    "preemptions", "preemptions_staleness", "preemptions_slo",
+    "drops", "drops_staleness_budget", "drops_max_preempts",
+    "drops_slo_shed", "admitted", "completed", "cow_forks",
 )
 _DERIVED_FIELDS = ("prefix_hit_rate", "host_syncs_per_token",
                    "decode_tokens_per_s", "prefill_tokens_per_s")
@@ -90,7 +92,15 @@ class ServingMetrics:
     interrupts: int = 0          # weight publishes observed with work in flight
     resumed_sequences: int = 0   # in-flight seqs carried across a publish
     preemptions: int = 0
-    drops: int = 0               # admission-refused, staleness budget blown
+    # preemption reasons: staleness budget blown in-flight vs SLO-driven
+    # overload eviction of a lower class (loadgen.slo scheduler)
+    preemptions_staleness: int = 0
+    preemptions_slo: int = 0
+    drops: int = 0               # total, all reasons
+    # drop reasons (scheduler stamps Request.drop_reason):
+    drops_staleness_budget: int = 0  # queued past d_max
+    drops_max_preempts: int = 0      # preempted once too often
+    drops_slo_shed: int = 0          # deadline-aware admission shed
     admitted: int = 0
     completed: int = 0
     cow_forks: int = 0
@@ -171,7 +181,12 @@ class ServingMetrics:
             interrupts=float(self.interrupts),
             resumed_sequences=float(self.resumed_sequences),
             preemptions=float(self.preemptions),
+            preemptions_staleness=float(self.preemptions_staleness),
+            preemptions_slo=float(self.preemptions_slo),
             drops=float(self.drops),
+            drops_staleness_budget=float(self.drops_staleness_budget),
+            drops_max_preempts=float(self.drops_max_preempts),
+            drops_slo_shed=float(self.drops_slo_shed),
             admitted=float(self.admitted),
             completed=float(self.completed),
             cow_forks=float(self.cow_forks),

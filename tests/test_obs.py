@@ -230,7 +230,9 @@ EXPECTED_SERVING_KEYS = {
     "prefill_tokens_per_s",
     "decode_tokens", "decode_host_syncs", "decode_launches",
     "decode_time_s", "host_syncs_per_token", "decode_tokens_per_s",
-    "interrupts", "resumed_sequences", "preemptions", "drops",
+    "interrupts", "resumed_sequences", "preemptions",
+    "preemptions_staleness", "preemptions_slo", "drops",
+    "drops_staleness_budget", "drops_max_preempts", "drops_slo_shed",
     "admitted", "completed", "cow_forks",
 }
 

@@ -201,6 +201,83 @@ def test_scheduler_staleness_budget_and_block_release(setup):
     assert eng.allocator.refcount == {}
 
 
+def test_scheduler_aging_beats_backpressure_starvation(setup):
+    """Under sustained backpressure_high, a non-urgent request used to
+    wait forever; with age_promote_s it is promoted to priority 0 after
+    aging and admitted despite the hold (and ahead of younger urgent
+    arrivals)."""
+    cfg, params = setup
+    eng = _engine(cfg)
+    bulk = Request(1, _prompt(cfg, seed=1), 2, priority=1)
+    urgent = Request(2, _prompt(cfg, seed=2), 2, priority=0)
+
+    # without aging: held at backpressure_high for as long as it lasts
+    sched = AdmissionScheduler(SchedulerConfig(d_max=100,
+                                               backpressure_high=0.5))
+    sched.enqueue(bulk, now_s=0.0)
+    for t in (0.0, 10.0, 1000.0):
+        assert sched.pop_admissible(0, engine=eng, queue_frac=0.8,
+                                    now_s=t) is None
+
+    # with aging: promoted to priority 0 once it has waited long enough,
+    # which both bypasses the prio>0 hold and outranks younger urgent
+    sched = AdmissionScheduler(SchedulerConfig(
+        d_max=100, backpressure_high=0.5, age_promote_s=1.0))
+    sched.enqueue(bulk, now_s=0.0)
+    assert sched.pop_admissible(0, engine=eng, queue_frac=0.8,
+                                now_s=0.5) is None  # too young
+    sched.enqueue(urgent, now_s=1.5)
+    got = sched.pop_admissible(0, engine=eng, queue_frac=0.8, now_s=1.5)
+    assert got is not None and got[0].rid == 1  # aged bulk, then urgent
+    got2 = sched.pop_admissible(0, engine=eng, queue_frac=0.8, now_s=1.5)
+    assert got2 is not None and got2[0].rid == 2
+
+
+def test_drop_reason_counters(setup):
+    """Every drop/preempt carries a reason that lands in the per-reason
+    ServingMetrics counters (and therefore in StepRecord.serving)."""
+    cfg, params = setup
+    store = WeightStore(params, 0)
+    eng = _engine(cfg)
+    sched = AdmissionScheduler(SchedulerConfig(
+        d_max=2, preempt_action="requeue", max_preempts=0))
+    cp = ServingControlPlane(eng, store, sched, use_prefix_cache=False,
+                             resubmit_dropped=False)
+    key = jax.random.PRNGKey(9)
+
+    # (1) budget drop at the admission gate -> drops_staleness_budget
+    cp.submit(_prompt(cfg), max_new=4)
+    store.publish(params, 5)
+    key, sub = jax.random.split(key)
+    cp.step(sub)
+    assert cp.metrics.drops_staleness_budget == 1
+    assert cp.metrics.drops_max_preempts == 0
+    drop = cp.dropped_requests[-1]
+    assert drop.drop_reason == "staleness_budget"
+    assert drop.t_done >= 0  # terminal outcome is stamped
+
+    # (2) staleness preemption with max_preempts=0 -> requeue is over
+    # budget immediately -> drops_max_preempts
+    cp.submit(_prompt(cfg), max_new=16)
+    key, sub = jax.random.split(key)
+    cp.step(sub)
+    store.publish(params, 20)
+    key, sub = jax.random.split(key)
+    cp.step(sub)
+    assert cp.metrics.preemptions == 1
+    assert cp.metrics.preemptions_staleness == 1
+    assert cp.metrics.preemptions_slo == 0
+    assert cp.metrics.drops_max_preempts == 1
+    assert cp.dropped_requests[-1].drop_reason == "max_preempts"
+
+    # the per-reason counters are part of the serving snapshot schema
+    snap = cp.metrics.snapshot()
+    for reason in ("staleness_budget", "max_preempts", "slo_shed"):
+        assert f"drops_{reason}" in snap
+    assert snap["drops"] == snap["drops_staleness_budget"] + \
+        snap["drops_max_preempts"] + snap["drops_slo_shed"]
+
+
 def test_scheduler_priority_order(setup):
     """Lower priority class is admitted first regardless of arrival."""
     cfg, params = setup
