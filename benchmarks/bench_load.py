@@ -14,12 +14,22 @@ Everything is on the virtual clock (deterministic), so the committed
 ``experiments/load_slo.json`` is reproducible byte-for-byte. Headline:
 interactive TTFT p99 and SLO-attainment, slo vs fifo.
 
-Run directly (``python -m benchmarks.bench_load [--quick]``) or as the
-``load`` section of ``benchmarks.run``.
+The ``--multiarch`` mode replays the same trace against all three
+serving architectures — dense attention (``toy-2m``), pure-SSM
+(``mamba2-370m-reduced``), hybrid (``zamba2-1.2b-reduced``) — each on a
+virtual clock scaled by that architecture's *fitted* ``CostModel``
+coefficients (``repro.loadgen.costfit``), so the one table compares how
+the same overload trace lands on genuinely different machines. The
+committed JSON pins coefficients fitted once on the dev machine (wall
+fits are machine-specific); ``--fit`` re-fits live.
+
+Run directly (``python -m benchmarks.bench_load [--quick] [--multiarch]``)
+or as the ``load`` / ``load_multiarch`` sections of ``benchmarks.run``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 from typing import Dict, List
@@ -33,6 +43,7 @@ from repro.models import model as M
 
 OUT_JSON = (pathlib.Path(__file__).resolve().parent.parent / "experiments"
             / "load_slo.json")
+OUT_MULTIARCH_JSON = OUT_JSON.with_name("load_multiarch.json")
 
 # 2-class mix: the SLO contrast is sharpest with one latency-critical
 # class competing against a bulk majority
@@ -47,6 +58,30 @@ CLASSES = (
 # wall-clock) still produces genuine queueing overload
 COST = CostModel(step_overhead_s=0.010, prefill_chunk_s=0.020,
                  decode_token_s=0.010)
+
+# (arch, arch_type) per serving tower; dtype is replaced with float32 so
+# CPU replays are deterministic across BLAS paths
+MULTIARCH = (("toy-2m", "dense"), ("mamba2-370m-reduced", "ssm"),
+             ("zamba2-1.2b-reduced", "hybrid"))
+
+# coefficients fitted by repro.loadgen.costfit.fit_cost_model on the dev
+# machine (CPU backend, defaults) — pinned so the committed JSON is
+# reproducible; refit live with --fit. The *ratios* carry the signal:
+# hybrid decode ~10x the dense toy per token, SSM ~4x. A common scale
+# factor (ratio-preserving, like the inflated COST above) shrinks the
+# virtual capacity so the small trace still overloads each engine.
+COST_SCALE = 25.0
+FITTED_COSTS = {
+    "toy-2m": CostModel(step_overhead_s=0.0016573,
+                        prefill_chunk_s=0.0023972,
+                        decode_token_s=0.0000812),
+    "mamba2-370m-reduced": CostModel(step_overhead_s=0.0007072,
+                                     prefill_chunk_s=0.0021537,
+                                     decode_token_s=0.0003143),
+    "zamba2-1.2b-reduced": CostModel(step_overhead_s=0.0012215,
+                                     prefill_chunk_s=0.0065457,
+                                     decode_token_s=0.0008083),
+}
 
 
 def _one(cfg, params, trace, *, policy: str) -> Dict[str, object]:
@@ -120,15 +155,105 @@ def run(csv: CsvOut, *, quick: bool = False, save_json: bool = True) -> None:
         print(f"# wrote {OUT_JSON}")
 
 
+def run_multiarch(csv: CsvOut, *, quick: bool = False,
+                  save_json: bool = True, fit: bool = False) -> None:
+    """One trace, three serving architectures, one SLO table."""
+    from repro.configs.registry import get_config
+    from repro.loadgen.costfit import describe, fit_cost_model
+
+    if quick:
+        tc = TraceConfig(seed=0, duration_s=1.0, rate_rps=10.0,
+                         burstiness=0.6)
+    else:
+        tc = TraceConfig(seed=0, duration_s=3.0, rate_rps=12.0,
+                         burstiness=0.6)
+    trace = synthesize(tc, CLASSES)
+
+    rows: List[Dict[str, object]] = []
+    for arch, arch_type in MULTIARCH:
+        cfg = dataclasses.replace(get_config(arch), dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        fitted = fit_cost_model(cfg, params) if fit \
+            else FITTED_COSTS[arch]
+        cost = CostModel(
+            step_overhead_s=fitted.step_overhead_s * COST_SCALE,
+            prefill_chunk_s=fitted.prefill_chunk_s * COST_SCALE,
+            decode_token_s=fitted.decode_token_s * COST_SCALE)
+        res = run_trace(cfg, params, trace, policy="slo", cost=cost,
+                        max_seqs=2, decode_horizon=4, prefill_chunk=16)
+        s = res.summary
+        row = {"arch": arch, "arch_type": arch_type,
+               "cost_model": {"step_overhead_s": fitted.step_overhead_s,
+                              "prefill_chunk_s": fitted.prefill_chunk_s,
+                              "decode_token_s": fitted.decode_token_s},
+               "requests": s["requests"], "completed": s["completed"],
+               "dropped": s["dropped"], "steps": s["steps"],
+               "virtual_time_s": s["virtual_time_s"],
+               "classes": s["classes"], "serving": s["serving"]}
+        rows.append(row)
+        inter = row["classes"]["interactive"]
+        csv.add(f"load_multiarch/{arch_type}",
+                row["virtual_time_s"] / max(row["requests"], 1),
+                derived=f"arch={arch} "
+                        f"done={row['completed']}/{row['requests']} "
+                        f"inter_ttft_p99={inter['ttft_p99_s'] * 1e3:.0f}ms "
+                        f"inter_slo={inter['slo_attainment'] * 100:.0f}% "
+                        f"cost[{describe(cost)}]")
+
+    by = {r["arch_type"]: r for r in rows}
+    headline = {
+        "virtual_time_s": {t: by[t]["virtual_time_s"] for t in by},
+        "interactive_slo_attainment": {
+            t: by[t]["classes"]["interactive"]["slo_attainment"]
+            for t in by},
+        "interactive_ttft_p99_s": {
+            t: by[t]["classes"]["interactive"]["ttft_p99_s"] for t in by},
+        "decode_token_cost_ratio": {
+            t: round(by[t]["cost_model"]["decode_token_s"]
+                     / by["dense"]["cost_model"]["decode_token_s"], 3)
+            for t in by},
+    }
+    print("# multiarch (policy=slo): "
+          + "; ".join(
+              f"{t} vtime={by[t]['virtual_time_s']:.2f}s slo="
+              f"{by[t]['classes']['interactive']['slo_attainment'] * 100:.0f}%"
+              for t in ("dense", "ssm", "hybrid")))
+    if save_json:
+        OUT_MULTIARCH_JSON.write_text(json.dumps(
+            {"bench": "load_multiarch", "policy": "slo",
+             "cost_fit": "pinned" if not fit else "live",
+             "cost_scale": COST_SCALE,
+             "classes": [dict(c.to_dict()) for c in CLASSES],
+             "trace": {"seed": tc.seed, "duration_s": tc.duration_s,
+                       "rate_rps": tc.rate_rps,
+                       "burstiness": tc.burstiness,
+                       "requests": len(trace.requests)},
+             "max_seqs": 2, "decode_horizon": 4,
+             "headline": headline, "rows": rows},
+            indent=2) + "\n")
+        print(f"# wrote {OUT_MULTIARCH_JSON}")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true",
                    help="CI smoke: tiny trace, fifo+slo only; does not "
                         "overwrite the committed JSON")
+    p.add_argument("--multiarch", action="store_true",
+                   help="replay one trace against dense/ssm/hybrid "
+                        "serving with per-arch cost models")
+    p.add_argument("--fit", action="store_true",
+                   help="with --multiarch: re-fit cost models live "
+                        "instead of using the pinned coefficients")
     args = p.parse_args()
     csv = CsvOut()
     csv.header()
-    run(csv, quick=args.quick, save_json=not args.quick)
+    if args.multiarch:
+        run_multiarch(csv, quick=args.quick,
+                      save_json=not args.quick and not args.fit,
+                      fit=args.fit)
+    else:
+        run(csv, quick=args.quick, save_json=not args.quick)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,9 @@
                                   chunked prefill lane — TTFT + tok/s)
   load    -> bench_load          (serving: SLO-aware scheduling vs FIFO
                                   under trace-driven overload)
+  load_multiarch -> bench_load --multiarch (serving: one overload trace
+                                  against dense/SSM/hybrid towers with
+                                  per-arch fitted cost models)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -33,12 +36,14 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    choices=["fig1", "table1", "roofline", "kernels",
-                            "prefix", "decode", "prefill", "load"])
+                            "prefix", "decode", "prefill", "load",
+                            "load_multiarch"])
     p.add_argument("--steps", type=int, default=30,
                    help="RL steps for the training bench")
     p.add_argument("--quick", action="store_true",
-                   help="CI smoke mode: tiny step counts, and only the "
-                        "fig1/decode/table1 sections unless --only is given")
+                   help="CI smoke mode: tiny step counts; skips the "
+                        "kernels/roofline/prefix sections unless --only "
+                        "is given")
     p.add_argument("--phase-json", default=None, metavar="FILE",
                    help="attach the span tracer and write a per-phase "
                         "(rollout/prefill/decode/train/publish) breakdown "
@@ -88,6 +93,9 @@ def main() -> None:
                                                  save_json=not args.quick))
     section("load", lambda: bench_load.run(csv, quick=args.quick,
                                            save_json=not args.quick))
+    section("load_multiarch",
+            lambda: bench_load.run_multiarch(csv, quick=args.quick,
+                                             save_json=not args.quick))
     section("table1", lambda: bench_training.run(
         csv, num_steps=steps, sft_steps=sft_steps,
         save_json=not args.quick))

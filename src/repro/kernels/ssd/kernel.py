@@ -45,6 +45,59 @@ def _kernel(x_ref, la_ref, b_ref, c_ref, y_ref, s_ref, cdec_ref, *,
     cdec_ref[...] = jnp.exp(cum[-1:]).astype(cdec_ref.dtype)
 
 
+def _decode_kernel(state_ref, x_ref, dt_ref, alog_ref, b_ref, c_ref,
+                   y_ref, new_state_ref):
+    state = state_ref[...].astype(jnp.float32)   # [hd, ds]
+    x = x_ref[...].astype(jnp.float32)           # [hd]
+    dt = dt_ref[0].astype(jnp.float32)
+    a = jnp.exp(dt * (-jnp.exp(alog_ref[0].astype(jnp.float32))))
+    b = b_ref[...].astype(jnp.float32)           # [ds]
+    new = state * a + (dt * x)[:, None] * b[None, :]
+    new_state_ref[...] = new.astype(new_state_ref.dtype)
+    c = c_ref[...].astype(jnp.float32)           # [ds]
+    y_ref[...] = jnp.dot(new, c, preferred_element_type=jnp.float32
+                         ).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_decode_step_pallas(
+    state: jax.Array,  # [B, nh, hd, ds] f32
+    x: jax.Array,      # [B, nh, hd]
+    dt: jax.Array,     # [B, nh]  (softplus'd)
+    a_log: jax.Array,  # [nh]
+    b: jax.Array,      # [B, ds]
+    c: jax.Array,      # [B, ds]
+    *, interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent SSD decode step per (batch, head) grid cell.
+
+    Returns (y [B,nh,hd] in x's dtype, new state [B,nh,hd,ds] f32).
+    """
+    B, nh, hd, ds = state.shape
+    y, new_state = pl.pallas_call(
+        _decode_kernel,
+        grid=(B, nh),
+        in_specs=[
+            pl.BlockSpec((None, None, hd, ds), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, hd), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((None, 1), lambda bi, hi: (bi, hi)),
+            pl.BlockSpec((1,), lambda bi, hi: (hi,)),
+            pl.BlockSpec((None, ds), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((None, ds), lambda bi, hi: (bi, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, None, hd), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((None, None, hd, ds), lambda bi, hi: (bi, hi, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
+        ),
+        interpret=interpret,
+    )(state, x, dt, a_log, b, c)
+    return y, new_state
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_intra_chunk_pallas(
     xdt: jax.Array,   # [B, S, nh, hd]  (x pre-scaled by dt)

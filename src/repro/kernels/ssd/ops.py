@@ -10,8 +10,23 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ssd.kernel import ssd_intra_chunk_pallas
-from repro.kernels.ssd.ref import ssd_sequential_ref
+from repro.kernels.ssd.kernel import (ssd_decode_step_pallas,
+                                      ssd_intra_chunk_pallas)
+from repro.kernels.ssd.ref import ssd_decode_step_ref, ssd_sequential_ref
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a_log: jax.Array, b: jax.Array, c: jax.Array,
+                    *, interpret: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """O(1) SSD decode step: dispatch to the Pallas kernel on TPU (or in
+    interpret mode), else the jnp reference — same convention as
+    ``decode_attn``/``prefill_attn``."""
+    if not (jax.default_backend() == "tpu" or interpret):
+        return ssd_decode_step_ref(state, x, dt, a_log, b, c)
+    return ssd_decode_step_pallas(
+        state, x, dt, a_log, b, c,
+        interpret=jax.default_backend() != "tpu")
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,

@@ -8,6 +8,25 @@ import jax
 import jax.numpy as jnp
 
 
+def ssd_decode_step_ref(state: jax.Array, x: jax.Array, dt: jax.Array,
+                        a_log: jax.Array, b: jax.Array, c: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent SSD step (the O(1) decode update).
+
+    state [B,nh,hd,ds] f32; x [B,nh,hd]; dt [B,nh] (softplus'd);
+    b/c [B,ds]. Returns (y [B,nh,hd] in c's dtype, new state f32).
+    This is the exact math ``models.ssm.ssm_decode`` historically inlined
+    — the serving decode tower and the whole-sequence reference share it,
+    so paged SSM decode is bit-identical to the dense-cache path.
+    """
+    a = jnp.exp(dt * (-jnp.exp(a_log.astype(jnp.float32))))  # [B,nh]
+    state = state * a[..., None, None] + jnp.einsum(
+        "bh,bhd,bs->bhds", dt, x.astype(jnp.float32),
+        b.astype(jnp.float32))
+    y = jnp.einsum("bs,bhds->bhd", c, state.astype(c.dtype))
+    return y, state
+
+
 def ssd_sequential_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array,
                        b: jax.Array, c: jax.Array,
                        initial_state=None) -> Tuple[jax.Array, jax.Array]:

@@ -59,10 +59,10 @@ def attn_block_full(params, x, cfg: ModelConfig, positions, pad_mask=None,
 
 
 def ssm_block_full(params, x, cfg: ModelConfig, pad_mask=None,
-                   initial_cache=None):
+                   initial_cache=None, valid_lens=None):
     h = rmsnorm(params["ln"], x, cfg.norm_eps)
     y, cache = ssm_mod.ssm_full(params["ssm"], h, cfg, initial_cache,
-                                pad_mask=pad_mask)
+                                pad_mask=pad_mask, valid_lens=valid_lens)
     return x + y, jnp.zeros((), jnp.float32), cache
 
 

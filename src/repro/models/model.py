@@ -80,18 +80,25 @@ def model_spec(cfg: ModelConfig) -> SpecTree:
     return spec
 
 
+@functools.lru_cache(maxsize=64)
+def _cached_spec(cfg: ModelConfig) -> SpecTree:
+    """Memoized ``model_spec`` for read-only consumers (ModelConfig is a
+    frozen/hashable dataclass). Callers must not mutate the returned tree."""
+    return model_spec(cfg)
+
+
 def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
     dtype = dtype or jnp.dtype(cfg.dtype)
-    return init_from_specs(model_spec(cfg), key, dtype)
+    return init_from_specs(_cached_spec(cfg), key, dtype)
 
 
 def abstract_params(cfg: ModelConfig, dtype=None):
     dtype = dtype or jnp.dtype(cfg.dtype)
-    return abstract_from_specs(model_spec(cfg), dtype)
+    return abstract_from_specs(_cached_spec(cfg), dtype)
 
 
 def param_shardings(cfg: ModelConfig, env: ShardingEnv):
-    return shardings_from_specs(model_spec(cfg), env)
+    return shardings_from_specs(_cached_spec(cfg), env)
 
 
 # ---------------------------------------------------------------- embeddings
@@ -423,9 +430,3 @@ def _hybrid_prefill(params, cfg, x, positions, pad_mask, window, write_kv):
     else:
         ssm_c = main_ssm_c
     return x, attn_c, ssm_c
-
-
-# ------------------------------------------------------------------ utility
-@functools.lru_cache(maxsize=64)
-def _cached_spec(cfg: ModelConfig):
-    return model_spec(cfg)

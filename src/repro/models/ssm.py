@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.distributed.sharding import constrain
+from repro.kernels.ssd.ops import ssd_decode_step
 from repro.models.params import ParamSpec
 
 
@@ -134,9 +135,16 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
 
 
 def ssm_full(params, x: jax.Array, cfg: ModelConfig,
-             initial_cache: Dict[str, Any] = None, pad_mask=None
-             ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Full-sequence Mamba2 block. x: [B,S,d] -> (y, final cache)."""
+             initial_cache: Dict[str, Any] = None, pad_mask=None,
+             valid_lens=None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full-sequence Mamba2 block. x: [B,S,d] -> (y, final cache).
+
+    ``valid_lens`` [B] (requires ``initial_cache``): per-row count of real
+    tokens under right padding; the returned conv tail is sliced at each
+    row's true sequence end instead of the last K-1 rows, so ragged chunks
+    resume exactly (a row with 0 valid tokens gets its old cache back
+    bit-for-bit).
+    """
     s = cfg.ssm
     d = cfg.d_model
     din, nh, hd = s.d_inner(d), s.num_heads(d), s.head_dim
@@ -160,8 +168,6 @@ def ssm_full(params, x: jax.Array, cfg: ModelConfig,
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     if pad_mask is not None:
         # padded steps must not advance the state: dt=0 => a=1, input gain=0.
-        # (NOTE: ragged right-padding still leaves pad inputs in the conv
-        # tail cache; the rollout engine uses uniform prompt lengths.)
         dt = dt * pad_mask[..., None].astype(dt.dtype)
 
     y, state = ssd_chunked(xh, dt, params["a_log"], b, c, s.chunk_size,
@@ -170,8 +176,17 @@ def ssm_full(params, x: jax.Array, cfg: ModelConfig,
     y = y.reshape(B, S, din)
     y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
-    conv_tail = (xbc_raw if initial_cache is None else xbc_raw)[
-        :, -(s.d_conv - 1):, :]
+    if valid_lens is not None:
+        # ragged right-padding leaves pad inputs in the last K-1 rows;
+        # slice each row's window at its true end. With the prepended
+        # cache, xbc_raw[v : v + K-1] is exactly the window after
+        # consuming v real tokens (v=0 returns the old cache unchanged).
+        assert initial_cache is not None, "valid_lens requires initial_cache"
+        conv_tail = jax.vmap(
+            lambda row, off: jax.lax.dynamic_slice_in_dim(
+                row, off, s.d_conv - 1, axis=0))(xbc_raw, valid_lens)
+    else:
+        conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]
     return out, {"conv": conv_tail, "state": state}
 
 
@@ -192,12 +207,7 @@ def ssm_decode(params, x: jax.Array, cfg: ModelConfig,
     xs, b, c = jnp.split(conv_out, [din, din + s.d_state], axis=-1)
     xh = xs.reshape(B, nh, hd)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,nh]
-    a = jnp.exp(dt * (-jnp.exp(params["a_log"].astype(jnp.float32))))
-
-    state = cache["state"] * a[..., None, None] + jnp.einsum(
-        "bh,bhd,bs->bhds", dt, xh.astype(jnp.float32),
-        b.astype(jnp.float32))
-    y = jnp.einsum("bs,bhds->bhd", c, state.astype(c.dtype))
+    y, state = ssd_decode_step(cache["state"], xh, dt, params["a_log"], b, c)
     y = y.astype(x.dtype) + xh * params["d_skip"][None, :, None].astype(x.dtype)
     y = _gated_norm(y.reshape(B, din), z, params["norm"], cfg.norm_eps)
     out = jnp.einsum("be,ed->bd", y, params["out_proj"])

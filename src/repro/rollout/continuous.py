@@ -5,7 +5,10 @@ step compiles once for ``max_seqs``); finished sequences release their
 pages back to the allocator. This is the serving loop the paper's rollout
 engines (vLLM/SGLang) implement, in-framework.
 
-Supports dense GQA/MHA architectures (the paged pool holds per-layer K/V).
+Supports dense GQA/MHA architectures (the paged pool holds per-layer
+K/V), pure-SSM stacks (mamba2 — a constant-size per-slot state pool
+instead of KV blocks), and hybrid stacks (zamba2 — SSM state slots plus
+the paged pool for the shared attention layers).
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ from repro.configs.base import ModelConfig, RLConfig
 from repro.data import tokenizer as tok
 from repro.kernels.decode_attn.ops import paged_decode_attention_op
 from repro.kernels.prefill_attn.ops import paged_prefill_attention_op
+from repro.models import blocks as blk_mod
 from repro.models import model as M
 from repro.models.attention import decode_attention
 from repro.models.layers import (
@@ -429,6 +433,255 @@ def _paged_decode_horizon(params, cfg: ModelConfig, pool_k, pool_v,
     return packed, pool_k, pool_v, lens, logits
 
 
+# ---------------------------------------------------- multi-architecture
+def _multiarch_token_stack(params, cfg: ModelConfig, lens, tokens, conv,
+                           state, kv, append_attend, update_mask):
+    """One-token stack over SSM/hybrid layer sequences.
+
+    ``conv``/``state`` are the per-slot recurrent pools [n_ssm, S, ...];
+    ``update_mask`` [S] gates their update — a masked slot carries its
+    state through bit-exactly (the SSM analogue of redirecting KV appends
+    to the scratch block). Attention layers (hybrid's shared block) run
+    the same math as ``_token_layer_stack``'s body through
+    ``append_attend``. Python-unrolled over ``cfg.block_kinds()``: the
+    layer sequence is heterogeneous and serving stacks are shallow.
+    """
+    x = embed_tokens(params["embedding"], tokens[:, None], cfg)[:, 0]
+    ssm_params = params["blocks"] if cfg.arch_type == "ssm" \
+        else params["ssm_blocks"]
+    si = ai = 0
+    for kind in cfg.block_kinds():
+        if kind == "ssm":
+            lp = jax.tree.map(lambda a, i=si: a[i], ssm_params)
+            c_in = {"conv": conv[si], "state": state[si]}
+            x, _, c_out = blk_mod.ssm_block_decode(lp, x, cfg, c_in)
+            m3 = update_mask[:, None, None]
+            conv = conv.at[si].set(jnp.where(m3, c_out["conv"], conv[si]))
+            state = state.at[si].set(
+                jnp.where(m3[..., None], c_out["state"], state[si]))
+            si += 1
+        else:
+            lp = params["shared_attn"]
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            ap = lp["attn"]
+            q = jnp.einsum("bd,dhk->bhk", h, ap["wq"])
+            k = jnp.einsum("bd,dhk->bhk", h, ap["wk"])
+            v = jnp.einsum("bd,dhk->bhk", h, ap["wv"])
+            if cfg.qkv_bias:
+                q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+            qk = apply_rope(jnp.concatenate([q, k], axis=1)[:, None],
+                            lens[:, None], cfg.rope_theta)[:, 0]
+            q, k = qk[:, : q.shape[1]], qk[:, q.shape[1]:]
+            o, kv = append_attend(ai, q, k, v, kv)
+            y = jnp.einsum("bhk,hkd->bd", o, ap["wo"])
+            if cfg.parallel_block:
+                x = x + y + swiglu(lp["ffn"], h)
+            else:
+                x = x + y
+                h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+                x = x + swiglu(lp["ffn"], h2)
+            ai += 1
+    x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)[:, 0]
+    logits = logits_from_hidden(params["embedding"], x, cfg)
+    return logits, conv, state, kv
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "trash_block"),
+                   donate_argnames=("pool_k", "pool_v", "conv", "state"))
+def _multiarch_decode_step(params, cfg: ModelConfig, pool_k, pool_v, conv,
+                           state, block_tables, seq_lens, tokens, active,
+                           *, trash_block: int = 0):
+    """SSM/hybrid variant of ``_paged_decode_step``: one token per slot,
+    KV appended into the paged pool (hybrid attention layers) and the
+    recurrent state pools advanced, with ``active`` gating both."""
+    bs = pool_k.shape[2]
+    safe_tables = jnp.maximum(block_tables, 0)
+    blk_idx = seq_lens // bs
+    write_block = jnp.take_along_axis(safe_tables, blk_idx[:, None],
+                                      axis=1)[:, 0]
+    write_block = jnp.where(active, write_block, trash_block)
+    offset = jnp.where(active, seq_lens % bs, 0)
+
+    def append_attend(li, q, k, v, kv):
+        pool_k, pool_v = kv
+        pool_k = pool_k.at[li, write_block, offset].set(
+            k.astype(pool_k.dtype))
+        pool_v = pool_v.at[li, write_block, offset].set(
+            v.astype(pool_v.dtype))
+        o = paged_decode_attention_op(q, pool_k[li], pool_v[li],
+                                      block_tables, seq_lens + 1)
+        return o, (pool_k, pool_v)
+
+    logits, conv, state, (pool_k, pool_v) = _multiarch_token_stack(
+        params, cfg, seq_lens, tokens, conv, state, (pool_k, pool_v),
+        append_attend, active)
+    return logits, pool_k, pool_v, conv, state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "horizon", "temperature",
+                                             "top_p", "greedy",
+                                             "trash_block"),
+                   donate_argnames=("pool_k", "pool_v", "conv", "state"))
+def _multiarch_decode_horizon(params, cfg: ModelConfig, pool_k, pool_v,
+                              conv, state, block_tables, seq_lens,
+                              next_logits, budget, key, *,
+                              trash_block: int, horizon: int,
+                              temperature: float, top_p: float,
+                              greedy: bool):
+    """SSM/hybrid variant of ``_paged_decode_horizon``.
+
+    The recurrent pools ride in the scan carry next to the KV pool; the
+    per-token emit mask gates both the KV append (scratch redirect) and
+    the state update (masked slots carry state through unchanged), so EOS
+    masking, budget exhaustion, and mid-prefill slots behave exactly as
+    in the dense horizon. No contiguous-view fast path: SSM state is
+    already O(1) per slot, and the hybrid attention layers take the paged
+    path on every backend.
+    """
+    bs = pool_k.shape[2]
+    safe_tables = jnp.maximum(block_tables, 0)
+    done0 = budget <= 0
+
+    def sample(logits, done, key, t):
+        key, sub = jax.random.split(key)
+        done_in = done | (t >= budget)
+        token, logp, mask, done_out = fused_sample_step(
+            logits, sub, done_in, temperature=temperature, top_p=top_p,
+            greedy=greedy)
+        done_out = done_out | (t + 1 >= budget)
+        return token, logp, mask, done_out, key
+
+    def one_token(carry, t):
+        pool_k, pool_v, conv, state, lens, logits, done, key = carry
+        token, logp, mask, done, key = sample(logits, done, key, t)
+        emit = mask > 0.0
+        blk_idx = lens // bs
+        wb = jnp.take_along_axis(safe_tables, blk_idx[:, None],
+                                 axis=1)[:, 0]
+        wb = jnp.where(emit, wb, trash_block)
+        off = jnp.where(emit, lens % bs, 0)
+
+        def append_attend(li, q, k, v, kv):
+            pool_k, pool_v = kv
+            pool_k = pool_k.at[li, wb, off].set(k.astype(pool_k.dtype))
+            pool_v = pool_v.at[li, wb, off].set(v.astype(pool_v.dtype))
+            o = paged_decode_attention_op(q, pool_k[li], pool_v[li],
+                                          block_tables, lens + 1)
+            return o, (pool_k, pool_v)
+
+        logits, conv, state, (pool_k, pool_v) = _multiarch_token_stack(
+            params, cfg, lens, token, conv, state, (pool_k, pool_v),
+            append_attend, emit)
+        lens = lens + emit.astype(lens.dtype)
+        return (pool_k, pool_v, conv, state, lens, logits, done, key), (
+            token, logp, mask)
+
+    ts = jnp.arange(horizon, dtype=jnp.int32)
+    (pool_k, pool_v, conv, state, lens, logits, _, _), \
+        (tokens, logps, masks) = jax.lax.scan(
+            one_token, (pool_k, pool_v, conv, state, seq_lens,
+                        next_logits, done0, key), ts)
+    packed = jnp.stack([tokens.astype(jnp.float32), logps, masks])
+    return packed, pool_k, pool_v, conv, state, lens, logits
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "trash_block"),
+                   donate_argnames=("pool_k", "pool_v", "conv", "state",
+                                    "next_logits"))
+def _multiarch_prefill_chunk(params, cfg: ModelConfig, pool_k, pool_v,
+                             conv, state, block_tables, seq_lens,
+                             next_logits, tokens, starts, counts,
+                             complete, *, trash_block: int):
+    """One fixed-shape SSM/hybrid prefill chunk, one batch row per slot.
+
+    Unlike the attention chunk lane (segment-packed [C] rows), the SSD
+    scan is recurrent per sequence, so each prefilling slot owns one row
+    of a [S, Cb] batch: ``tokens`` right-padded to the bucket,
+    ``counts`` [S] real tokens per row (0 = slot not prefilling),
+    ``starts`` [S] the per-slot prompt cursor. SSM layers run the
+    chunked SSD scan resuming from (and updating) the slot state pools —
+    pad rows carry dt=0 so they freeze the state exactly, and the conv
+    tail is sliced at ``counts`` so ragged chunks resume bit-exactly.
+    Hybrid attention layers flatten to [S*Cb] virtual decode rows over
+    the paged pool, exactly like ``_prefill_tower``. Completing slots
+    get next-token logits installed; ``seq_lens`` advances by ``counts``.
+    """
+    S, Cb = tokens.shape
+    bs = pool_k.shape[2]
+    row_active = counts > 0
+    pad_mask = jnp.arange(Cb)[None, :] < counts[:, None]           # [S, Cb]
+    positions = starts[:, None] + jnp.arange(Cb, dtype=jnp.int32)  # [S, Cb]
+    kv_lens = seq_lens + counts
+
+    # flattened [S*Cb] rows for the attention layers (hybrid only)
+    seg_flat = jnp.where(pad_mask, jnp.arange(S, dtype=jnp.int32)[:, None],
+                         -1).reshape(-1)
+    pos_flat = positions.reshape(-1)
+    safe_tables = jnp.maximum(block_tables, 0)
+    row_tables = safe_tables[jnp.maximum(seg_flat, 0)]
+    blk_idx = jnp.minimum(pos_flat // bs, row_tables.shape[1] - 1)
+    wb = jnp.take_along_axis(row_tables, blk_idx[:, None], axis=1)[:, 0]
+    wb = jnp.where(seg_flat >= 0, wb, trash_block)
+    off = jnp.where(seg_flat >= 0, pos_flat % bs, 0)
+
+    x = embed_tokens(params["embedding"], tokens, cfg)             # [S,Cb,d]
+    ssm_params = params["blocks"] if cfg.arch_type == "ssm" \
+        else params["ssm_blocks"]
+    si = ai = 0
+    for kind in cfg.block_kinds():
+        if kind == "ssm":
+            lp = jax.tree.map(lambda a, i=si: a[i], ssm_params)
+            c_in = {"conv": conv[si], "state": state[si]}
+            x, _, c_out = blk_mod.ssm_block_full(
+                lp, x, cfg, pad_mask=pad_mask, initial_cache=c_in,
+                valid_lens=counts)
+            m3 = row_active[:, None, None]
+            conv = conv.at[si].set(jnp.where(m3, c_out["conv"], conv[si]))
+            state = state.at[si].set(
+                jnp.where(m3[..., None], c_out["state"], state[si]))
+            si += 1
+        else:
+            lp = params["shared_attn"]
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            ap = lp["attn"]
+            q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"])
+            if cfg.qkv_bias:
+                q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+            qk = apply_rope(jnp.concatenate([q, k], axis=2), positions,
+                            cfg.rope_theta)
+            q, k = qk[:, :, : q.shape[2]], qk[:, :, q.shape[2]:]
+
+            def flat(t):
+                return t.reshape((S * Cb,) + t.shape[2:])
+
+            pool_k = pool_k.at[ai, wb, off].set(
+                flat(k).astype(pool_k.dtype))
+            pool_v = pool_v.at[ai, wb, off].set(
+                flat(v).astype(pool_v.dtype))
+            o = paged_prefill_attention_op(flat(q), pool_k[ai], pool_v[ai],
+                                           block_tables, seg_flat,
+                                           pos_flat, kv_lens)
+            y = jnp.einsum("bshk,hkd->bsd",
+                           o.reshape((S, Cb) + o.shape[1:]), ap["wo"])
+            if cfg.parallel_block:
+                x = x + y + swiglu(lp["ffn"], h)
+            else:
+                x = x + y
+                h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+                x = x + swiglu(lp["ffn"], h2)
+            ai += 1
+    h_last = jnp.take_along_axis(
+        x, jnp.maximum(counts - 1, 0)[:, None, None], axis=1)[:, 0]
+    h_last = rmsnorm(params["final_norm"], h_last[:, None],
+                     cfg.norm_eps)[:, 0]
+    logits = logits_from_hidden(params["embedding"], h_last, cfg)
+    next_logits = jnp.where(complete[:, None],
+                            logits.astype(next_logits.dtype), next_logits)
+    return next_logits, pool_k, pool_v, conv, state, seq_lens + counts
+
+
 class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, *, max_seqs: int = 8,
                  block_size: int = 16, n_blocks: int = 256,
@@ -436,7 +689,8 @@ class ContinuousBatchingEngine:
                  rl: Optional[RLConfig] = None, greedy: bool = False,
                  prefix_cache=None, decode_horizon: int = 1,
                  prefill_chunk: int = 32, prefill_mode: str = "chunked"):
-        assert cfg.arch_type in ("dense",), "paged serving: dense archs"
+        assert cfg.arch_type in ("dense", "ssm", "hybrid"), \
+            f"paged serving: dense/ssm/hybrid archs, got {cfg.arch_type}"
         assert prefill_mode in ("chunked", "dense"), prefill_mode
         self.cfg = cfg
         self.rl = rl or RLConfig()
@@ -463,6 +717,26 @@ class ContinuousBatchingEngine:
         # duck-typed serving.prefix_cache.RadixPrefixCache (kept untyped to
         # avoid a rollout -> serving import cycle)
         self.prefix_cache = prefix_cache
+        # SSM/hybrid: constant-size per-slot recurrent state rides next to
+        # the paged KV pool (which has zero layers for pure-SSM stacks —
+        # block/length bookkeeping stays uniform at no memory cost)
+        self.n_ssm = sum(1 for k in cfg.block_kinds() if k == "ssm")
+        if self.n_ssm:
+            assert cfg.moe is None and cfg.frontend is None, \
+                "SSM/hybrid serving: no MoE or frontend stacks"
+            assert prefill_mode == "chunked", \
+                "SSM/hybrid serving requires the chunked prefill lane"
+            assert prefix_cache is None, \
+                "radix prefix cache shares KV blocks across sequences; " \
+                "recurrent SSM state cannot be shared that way"
+            self.ssm_cache = pc.init_ssm_state_cache(
+                cfg, max_seqs=max_seqs, dtype=jnp.dtype(cfg.dtype))
+            self.ssm_pool = pc.SSMSlotPool(max_seqs)
+        else:
+            self.ssm_cache = None
+            self.ssm_pool = None
+        # the control plane checks this before attaching a radix cache
+        self.supports_prefix_cache = self.n_ssm == 0
         # reserve the last block as the scratch target for idle slots
         self.allocator = pc.BlockAllocator(n_blocks - 1)
         self.trash_block = n_blocks - 1
@@ -626,6 +900,11 @@ class ContinuousBatchingEngine:
                                          P + req.max_new)
         req.prefix_hit_tokens = n_matched
         req.prefill_pos = n_matched
+        if self.ssm_pool is not None:
+            # fresh sequence: map the slot and zero its recurrent state
+            self.ssm_pool.map(slot)
+            self.ssm_cache = pc.ssm_reset_slots(self.ssm_cache,
+                                                np.asarray([slot]))
         self._logits_version[slot] = version
         self._sync_mirrors()
 
@@ -649,7 +928,17 @@ class ContinuousBatchingEngine:
         token fast even while a long prompt is streaming; the long
         prompt takes whatever chunk capacity is left each launch, so it
         still progresses every boundary.
+
+        SSM/hybrid stacks cannot pack segments into one row stream (the
+        SSD scan is recurrent per sequence), so each prefilling slot owns
+        a batch row instead and advances by up to a full chunk per
+        launch.
         """
+        if self.n_ssm:
+            return [(s, self.slots[s].prefill_pos,
+                     min(len(self.slots[s].prompt)
+                         - self.slots[s].prefill_pos, self.prefill_chunk))
+                    for s in sorted(self.prefilling_slots())]
         order = sorted(
             self.prefilling_slots(),
             key=lambda s: (len(self.slots[s].prompt)
@@ -688,6 +977,9 @@ class ContinuousBatchingEngine:
     def _prefill_chunk_launch(self, params, work: List[tuple],
                               version: int) -> None:
         """One segment-packed chunk launch over ``[(slot, start, n)]``."""
+        if self.n_ssm:
+            self._multiarch_prefill_launch(params, work, version)
+            return
         n_rows = sum(n for _, _, n in work)
         bucket = self._chunk_bucket(n_rows)
         tokens = np.full((bucket,), tok.PAD, np.int32)
@@ -740,6 +1032,50 @@ class ContinuousBatchingEngine:
                     self.prefix_cache.insert(
                         r.prompt,
                         [int(b) for b in self._tables[slot][:n_blocks]])
+
+    def _multiarch_prefill_launch(self, params, work: List[tuple],
+                                  version: int) -> None:
+        """One batched SSM/hybrid prefill launch over ``[(slot, start,
+        n)]`` — each slot owns a row of a [max_seqs, bucket] batch."""
+        nmax = max(n for _, _, n in work)
+        bucket = self._chunk_bucket(nmax)
+        S = self.max_seqs
+        tokens = np.full((S, bucket), tok.PAD, np.int32)
+        starts = np.zeros((S,), np.int32)
+        counts = np.zeros((S,), np.int32)
+        complete = np.zeros((S,), bool)
+        for slot, start, n in work:
+            r = self.slots[slot]
+            tokens[slot, :n] = r.prompt[start: start + n]
+            starts[slot] = start
+            counts[slot] = n
+            complete[slot] = (start + n == len(r.prompt))
+        with span("prefill_chunk", rows=int(counts.sum()), bucket=bucket,
+                  segments=len(work), version=version,
+                  completed=int(complete.sum())):
+            self._prepare_decode({slot: n for slot, _, n in work})
+            (next_logits, pool_k, pool_v, conv, state, seq_lens) = \
+                _multiarch_prefill_chunk(
+                    params, self.cfg, self.state.pool_k,
+                    self.state.pool_v, self.ssm_cache.conv,
+                    self.ssm_cache.state, self.state.block_tables,
+                    self.state.seq_lens, self._next_logits,
+                    jnp.asarray(tokens), jnp.asarray(starts),
+                    jnp.asarray(counts), jnp.asarray(complete),
+                    trash_block=self.trash_block)
+        self._next_logits = next_logits
+        self.state = dataclasses.replace(self.state, pool_k=pool_k,
+                                         pool_v=pool_v, seq_lens=seq_lens)
+        self.ssm_cache = pc.SSMStateCache(conv=conv, state=state)
+        self.prefill_launches += 1
+        self.prefill_chunk_tokens += int(counts.sum())
+        self._note_compile(("machunk", bucket))
+        for slot, start, n in work:
+            r = self.slots[slot]
+            r.prefill_pos = start + n
+            self._lens[slot] += n
+            if r.prefill_done:
+                self._logits_version[slot] = version
 
     def _sync_mirrors(self) -> None:
         """Refresh host mirrors from the device (admission/prefill only —
@@ -867,6 +1203,19 @@ class ContinuousBatchingEngine:
                 dirty = True
         dirty |= pc.alloc_horizon_blocks(self.allocator, self._tables,
                                          self._lens, slot_tokens, bs)
+        if __debug__:
+            # every active slot's upcoming write positions must be mapped:
+            # an unmapped write is silently routed to the scratch block by
+            # write_token/_decode_tower, so catch the bookkeeping bug here
+            for slot, n in slot_tokens.items():
+                if n <= 0:
+                    continue
+                first, last = pc.write_range(int(self._lens[slot]), n, bs,
+                                             mb)
+                tab = self._tables[slot, first: last + 1]
+                assert (tab >= 0).all(), (
+                    f"slot {slot}: unmapped write blocks {tab.tolist()} "
+                    f"in range [{first}, {last}]")
         if dirty:
             self.state = dataclasses.replace(
                 self.state, block_tables=jnp.asarray(self._tables))
@@ -908,11 +1257,20 @@ class ContinuousBatchingEngine:
         self._prepare_decode({slot: 1 for slot in active})
         active_arr = np.zeros((self.max_seqs,), bool)
         active_arr[active] = True
-        logits, pool_k, pool_v = _paged_decode_step(
-            params, self.cfg, self.state.pool_k, self.state.pool_v,
-            self.state.block_tables, self.state.seq_lens,
-            jnp.asarray(tokens), jnp.asarray(active_arr),
-            trash_block=self.trash_block)
+        if self.n_ssm:
+            logits, pool_k, pool_v, conv, state = _multiarch_decode_step(
+                params, self.cfg, self.state.pool_k, self.state.pool_v,
+                self.ssm_cache.conv, self.ssm_cache.state,
+                self.state.block_tables, self.state.seq_lens,
+                jnp.asarray(tokens), jnp.asarray(active_arr),
+                trash_block=self.trash_block)
+            self.ssm_cache = pc.SSMStateCache(conv=conv, state=state)
+        else:
+            logits, pool_k, pool_v = _paged_decode_step(
+                params, self.cfg, self.state.pool_k, self.state.pool_v,
+                self.state.block_tables, self.state.seq_lens,
+                jnp.asarray(tokens), jnp.asarray(active_arr),
+                trash_block=self.trash_block)
         # mid-prefill rows of _next_logits become garbage here, which is
         # fine: they are only ever read after their completion chunk
         # overwrites them (completion always precedes decode-readiness)
@@ -975,13 +1333,28 @@ class ContinuousBatchingEngine:
             budget[s] = min(H, r.max_new - len(r.generated))
         self._prepare_decode({s: int(budget[s]) for s in active})
         with annotate("decode_horizon"):
-            packed, pool_k, pool_v, lens, logits = _paged_decode_horizon(
-                params, self.cfg, self.state.pool_k, self.state.pool_v,
-                self.state.block_tables, self.state.seq_lens,
-                self._next_logits, jnp.asarray(budget), key,
-                trash_block=self.trash_block, horizon=H,
-                temperature=self.rl.temperature, top_p=self.rl.top_p,
-                greedy=self.greedy)
+            if self.n_ssm:
+                (packed, pool_k, pool_v, conv, state, lens, logits) = \
+                    _multiarch_decode_horizon(
+                        params, self.cfg, self.state.pool_k,
+                        self.state.pool_v, self.ssm_cache.conv,
+                        self.ssm_cache.state, self.state.block_tables,
+                        self.state.seq_lens, self._next_logits,
+                        jnp.asarray(budget), key,
+                        trash_block=self.trash_block, horizon=H,
+                        temperature=self.rl.temperature,
+                        top_p=self.rl.top_p, greedy=self.greedy)
+                self.ssm_cache = pc.SSMStateCache(conv=conv, state=state)
+            else:
+                packed, pool_k, pool_v, lens, logits = \
+                    _paged_decode_horizon(
+                        params, self.cfg, self.state.pool_k,
+                        self.state.pool_v, self.state.block_tables,
+                        self.state.seq_lens, self._next_logits,
+                        jnp.asarray(budget), key,
+                        trash_block=self.trash_block, horizon=H,
+                        temperature=self.rl.temperature,
+                        top_p=self.rl.top_p, greedy=self.greedy)
         self.state = dataclasses.replace(self.state, pool_k=pool_k,
                                          pool_v=pool_v, seq_lens=lens)
         self._next_logits = logits
@@ -1030,6 +1403,10 @@ class ContinuousBatchingEngine:
         reset the mirrors + slot bookkeeping (callers push to device)."""
         self.allocator.release(
             [int(b) for b in self._tables[slot] if b >= 0])
+        if self.ssm_pool is not None:
+            # stale recurrent state stays in the pool; the next map of
+            # this slot zeroes it (ssm_reset_slots in start_prefill)
+            self.ssm_pool.release(slot)
         self._tables[slot] = -1
         self._tables[slot, 0] = self.trash_block
         self._lens[slot] = 0

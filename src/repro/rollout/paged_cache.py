@@ -98,9 +98,11 @@ class BlockAllocator:
 def init_paged_cache(cfg: ModelConfig, *, n_blocks: int, block_size: int,
                      max_seqs: int, max_blocks_per_seq: int,
                      dtype=None) -> PagedCacheState:
-    assert cfg.mla is None and not cfg.is_attention_free, \
-        "paged cache supports GQA/MHA attention stacks"
+    assert cfg.mla is None, \
+        "paged cache supports GQA/MHA attention stacks (no MLA yet)"
     dtype = dtype or jnp.dtype(cfg.dtype)
+    # attention-free (pure SSM) stacks get a zero-layer pool: block/length
+    # bookkeeping stays uniform across architectures at zero memory cost.
     n_attn = sum(1 for k in cfg.block_kinds() if k == "attn")
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     shape = (n_attn, n_blocks, block_size, kv, hd)
@@ -110,6 +112,100 @@ def init_paged_cache(cfg: ModelConfig, *, n_blocks: int, block_size: int,
         block_tables=jnp.full((max_seqs, max_blocks_per_seq), -1, jnp.int32),
         seq_lens=jnp.zeros((max_seqs,), jnp.int32),
     )
+
+
+# ------------------------------------------------------------ SSM state pool
+@dataclasses.dataclass
+class SSMStateCache:
+    """Constant-size per-slot recurrent state for SSM/hybrid decode.
+
+    Unlike KV, Mamba2 state does not grow with sequence length, so no
+    block table is needed: engine slot ``i`` owns row ``i`` of each pool.
+
+      conv  : [n_ssm_layers, max_seqs, d_conv-1, conv_dim]  (model dtype)
+      state : [n_ssm_layers, max_seqs, nh, hd, d_state]     (float32)
+    """
+    conv: jax.Array
+    state: jax.Array
+
+    @property
+    def max_seqs(self) -> int:
+        return self.conv.shape[1]
+
+    @property
+    def n_layers(self) -> int:
+        return self.conv.shape[0]
+
+
+def init_ssm_state_cache(cfg: ModelConfig, *, max_seqs: int,
+                         dtype=None) -> SSMStateCache:
+    assert cfg.ssm is not None, "SSM state cache needs cfg.ssm"
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    s, d = cfg.ssm, cfg.d_model
+    n_ssm = sum(1 for k in cfg.block_kinds() if k == "ssm")
+    conv_dim = s.d_inner(d) + 2 * s.d_state
+    return SSMStateCache(
+        conv=jnp.zeros((n_ssm, max_seqs, s.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((n_ssm, max_seqs, s.num_heads(d), s.head_dim,
+                         s.d_state), jnp.float32),
+    )
+
+
+def ssm_reset_slots(cache: SSMStateCache, slots) -> SSMStateCache:
+    """Zero conv window + state for ``slots`` (fresh sequences)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    return SSMStateCache(conv=cache.conv.at[:, slots].set(0),
+                         state=cache.state.at[:, slots].set(0.0))
+
+
+def ssm_fork_slot(cache: SSMStateCache, src: int, dst: int) -> SSMStateCache:
+    """Clone slot ``src``'s recurrent state into ``dst``.
+
+    The SSM analogue of ``fork_block``: recurrent state is private per
+    slot (nothing is refcounted), so a fork is a plain copy.
+    """
+    return SSMStateCache(conv=cache.conv.at[:, dst].set(cache.conv[:, src]),
+                         state=cache.state.at[:, dst].set(
+                             cache.state[:, src]))
+
+
+class SSMSlotPool:
+    """Host-side lifecycle mirror for SSM-state slots.
+
+    Constant-size state needs no free-list — slot ids are the engine's
+    own — but the *lifecycle* must mirror ``BlockAllocator``'s: map on
+    admit, release on finish/preempt (a released slot is re-zeroed before
+    reuse), fork when a mapped slot's state is cloned. The pool tracks
+    the mapped set and turns double-map / double-release bookkeeping bugs
+    into immediate assertions, the way the KV path surfaces them as
+    refcount errors.
+    """
+
+    def __init__(self, max_seqs: int):
+        self.max_seqs = max_seqs
+        self.mapped: set = set()
+        self.forks = 0  # state clones performed (metrics)
+
+    def map(self, slot: int) -> None:
+        assert 0 <= slot < self.max_seqs, f"SSM slot {slot} out of range"
+        assert slot not in self.mapped, f"double map of SSM slot {slot}"
+        self.mapped.add(slot)
+
+    def release(self, slot: int) -> None:
+        assert slot in self.mapped, f"release of unmapped SSM slot {slot}"
+        self.mapped.discard(slot)
+
+    def fork(self, src: int, dst: int) -> None:
+        assert src in self.mapped, f"fork from unmapped SSM slot {src}"
+        self.map(dst)
+        self.forks += 1
+
+    def is_mapped(self, slot: int) -> bool:
+        return slot in self.mapped
+
+    @property
+    def n_free(self) -> int:
+        return self.max_seqs - len(self.mapped)
 
 
 # ------------------------------------------------------------------ device ops
@@ -125,7 +221,13 @@ def write_token(state: PagedCacheState, layer: int, k: jax.Array,
     block_idx = lens // bs
     offset = lens % bs
     blocks = state.block_tables[slot_ids, block_idx]  # [B_active]
-    blocks = jnp.maximum(blocks, 0)  # unmapped -> block 0 (caller ensures mapped)
+    # Unmapped (-1) positions are routed to the scratch block — the last
+    # pool block, which the engine reserves as a write sink (the prefill
+    # lane uses the same convention) — never to live block 0: a
+    # bookkeeping bug then wastes a write instead of corrupting KV.
+    unmapped = blocks < 0
+    blocks = jnp.where(unmapped, state.pool_k.shape[1] - 1, blocks)
+    offset = jnp.where(unmapped, 0, offset)
 
     pool_k = state.pool_k.at[layer, blocks, offset].set(
         k.astype(state.pool_k.dtype))

@@ -62,7 +62,10 @@ class ServingControlPlane:
         self.rollout_queue = rollout_queue
         self.interrupts = InterruptController(store)
         self.resubmit_dropped = resubmit_dropped
-        if use_prefix_cache and engine.prefix_cache is None:
+        # SSM/hybrid engines carry recurrent state that cannot be shared
+        # across sequences, so they opt out of the radix cache entirely
+        if use_prefix_cache and engine.prefix_cache is None \
+                and getattr(engine, "supports_prefix_cache", True):
             engine.prefix_cache = RadixPrefixCache(engine.allocator,
                                                    engine.state.block_size)
         self._rid = 0

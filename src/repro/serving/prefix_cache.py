@@ -179,6 +179,30 @@ class RadixPrefixCache:
                     out.append(leaf)
         return out
 
+    def evictable_count(self) -> int:
+        """Blocks repeated ``evict`` rounds could *ever* free.
+
+        A node is reclaimable iff only the cache references its block
+        (refcount == 1) AND its entire subtree is reclaimable — an
+        in-use descendant pins every ancestor, since eviction only takes
+        leaves. Admission uses this to decide whether evicting can
+        possibly cover a shortfall before destroying any cached prefix.
+        """
+        def walk(node: _Node) -> Tuple[int, bool]:
+            total, all_free = 0, True
+            for child in list(node.children.values()) \
+                    + list(node.partials.values()):
+                t, f = walk(child)
+                total += t
+                all_free &= f
+            if node is self.root:
+                return total, all_free
+            if all_free and self.allocator.refs(node.block) == 1:
+                return total + 1, True
+            return total, False
+
+        return walk(self.root)[0]
+
     def _drop(self, node: _Node) -> None:
         parent = node.parent
         if node.key in parent.partials and parent.partials[node.key] is node:

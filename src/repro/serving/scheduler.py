@@ -113,8 +113,13 @@ class AdmissionScheduler:
             needed = engine.blocks_needed(req.prompt, req.max_new)
             if needed > engine.allocator.n_free:
                 cache = getattr(engine, "prefix_cache", None)
-                if cache is not None:
-                    cache.evict(needed - engine.allocator.n_free)
+                shortfall = needed - engine.allocator.n_free
+                # Only evict when eviction can actually cover the
+                # shortfall: destroying cached prefixes for a request
+                # that still can't be admitted is pure loss.
+                if cache is None or cache.evictable_count() < shortfall:
+                    return None
+                cache.evict(shortfall)
                 if needed > engine.allocator.n_free:
                     return None
             heapq.heappop(self._heap)

@@ -10,6 +10,7 @@ import pytest
 
 from repro.configs.base import RLConfig
 from repro.configs.registry import get_config
+from repro.core.algorithms import get_algorithm
 from repro.core.a3po import (
     alpha_from_staleness,
     compute_prox_logp_approximation,
@@ -291,9 +292,26 @@ def test_alpha_kl_adaptive_graceful_and_unified_dispatch():
     a2 = resolve_alpha(RLConfig(), versions=jnp.array([1, 1, 3, 3]),
                        current_version=3)
     np.testing.assert_allclose(a2, [0.5, 0.5, 0.0, 0.0])
-    loss, m = policy_objective("loglinear", logp, behav,
+    loss, m = policy_objective(get_algorithm("a3po"), logp, behav,
                                jnp.ones((4, 8)), mask, cfg)
     assert np.isfinite(float(loss))
+
+
+def test_policy_objective_loglinear_string_still_warns():
+    """The stringly-typed shim stays: 'loglinear' resolves through the
+    registry with a DeprecationWarning and matches the Algorithm call."""
+    key = jax.random.PRNGKey(1)
+    logp = -jax.random.uniform(key, (4, 8)) * 2
+    behav = logp + 0.1
+    adv, mask = jnp.ones((4, 8)), jnp.ones((4, 8))
+    cfg = RLConfig()
+    kw = dict(versions=jnp.array([0, 1, 2, 3]), current_version=3)
+    with pytest.warns(DeprecationWarning, match="stringly-typed"):
+        l_str, _ = policy_objective("loglinear", logp, behav, adv, mask,
+                                    cfg, **kw)
+    l_algo, _ = policy_objective(get_algorithm("a3po"), logp, behav, adv,
+                                 mask, cfg, **kw)
+    np.testing.assert_allclose(float(l_str), float(l_algo), rtol=1e-7)
 
 
 def test_trainer_step_kl_adaptive_end_to_end(toy):
