@@ -16,6 +16,9 @@
   load_multiarch -> bench_load --multiarch (serving: one overload trace
                                   against dense/SSM/hybrid towers with
                                   per-arch fitted cost models)
+  resilience -> bench_resilience (fault tolerance: worker-crash MTTR,
+                                  steps lost vs ckpt_every, checkpoint
+                                  save/restore latency, publish retries)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -37,7 +40,7 @@ def main() -> None:
     p.add_argument("--only", default=None,
                    choices=["fig1", "table1", "roofline", "kernels",
                             "prefix", "decode", "prefill", "load",
-                            "load_multiarch"])
+                            "load_multiarch", "resilience"])
     p.add_argument("--steps", type=int, default=30,
                    help="RL steps for the training bench")
     p.add_argument("--quick", action="store_true",
@@ -79,8 +82,8 @@ def main() -> None:
 
     from benchmarks import (bench_decode, bench_kernels, bench_load,
                             bench_prefill, bench_prefix_cache,
-                            bench_prox_time, bench_roofline,
-                            bench_training)
+                            bench_prox_time, bench_resilience,
+                            bench_roofline, bench_training)
     section("fig1", lambda: bench_prox_time.run(csv))
     section("kernels", lambda: bench_kernels.run(csv), skip_quick=True)
     section("roofline", lambda: bench_roofline.run(csv), skip_quick=True)
@@ -96,6 +99,9 @@ def main() -> None:
     section("load_multiarch",
             lambda: bench_load.run_multiarch(csv, quick=args.quick,
                                              save_json=not args.quick))
+    section("resilience",
+            lambda: bench_resilience.run(csv, quick=args.quick,
+                                         save_json=not args.quick))
     section("table1", lambda: bench_training.run(
         csv, num_steps=steps, sft_steps=sft_steps,
         save_json=not args.quick))

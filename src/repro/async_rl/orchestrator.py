@@ -11,6 +11,16 @@ Two operating modes:
 * ``simulate_async`` — deterministic single-thread simulation with an
   explicit staleness schedule. Used by tests and by the sync-vs-async
   benchmarks (reproducible, schedule-model timing).
+
+Fault tolerance (``repro.resilience``): both modes accept a
+``ResilienceConfig``. The rollout worker runs under a ``SupervisedWorker``
+(heartbeats, capture, bounded seeded restarts), queue pops go through
+``pop_with_health`` (a dead producer raises instead of deadlocking the
+trainer), weight publishes retry with backoff, a ``TrainGuard`` applies
+skip/rollback policies to non-finite updates, periodic crash-consistent
+checkpoints capture params/opt/step/RNG/weight-version, and a seeded
+``FaultPlan`` can inject crashes/stalls/NaNs at any of those sites.
+``StepRecord.resilience`` snapshots the ``resilience_*`` counters.
 """
 from __future__ import annotations
 
@@ -64,6 +74,10 @@ class StepRecord:
     # engine; +1 for the explicit prox pass of the 'recompute' baseline)
     train_tokens: float = 0.0
     host_syncs: float = 0.0
+    # resilience_* counter snapshot (faults injected, worker restarts,
+    # skipped updates, checkpoint saves/restores) when a ResilienceConfig
+    # is active
+    resilience: Optional[Dict[str, float]] = None
 
 
 def _rollout_once(engine: RolloutEngine, task: ArithmeticTask,
@@ -78,25 +92,51 @@ def _rollout_once(engine: RolloutEngine, task: ArithmeticTask,
     return rb, rewards
 
 
+def _inject_nan_reward(rewards: np.ndarray, faults) -> np.ndarray:
+    """``nan_grad`` fault: poison one reward (seeded choice). Advantages,
+    loss, and every gradient leaf go non-finite — exactly what the
+    on-device guard must catch."""
+    spec = faults.check("nan_grad") if faults is not None else None
+    if spec is None:
+        return rewards
+    rewards = np.asarray(rewards, np.float32).copy()
+    rewards[int(faults.rng.integers(len(rewards)))] = np.nan
+    return rewards
+
+
+def _resilience_snapshot(resilience) -> Optional[Dict[str, float]]:
+    if resilience is None:
+        return None
+    from repro.resilience.faults import resilience_snapshot
+    return resilience_snapshot()
+
+
 class AsyncOrchestrator:
     """Thread-decoupled rollout/training loop.
 
     ``algo`` is an ``Algorithm`` instance or registry name
     (``core.algorithms``); dispatch is entirely the Trainer's — the
-    orchestrator never branches on it."""
+    orchestrator never branches on it. ``resilience`` is an optional
+    ``repro.resilience.ResilienceConfig``."""
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
                  algo="a3po", n_prompts: int = 16,
                  max_new_tokens: int = 8, queue_capacity: int = 4,
                  seed: int = 0, use_control_plane: bool = False,
                  serve_kwargs: Optional[Dict] = None,
-                 decode_horizon: int = 8):
+                 decode_horizon: int = 8,
+                 resilience=None):
         self.cfg, self.rl, self.task = cfg, rl, task
         self.n_prompts = n_prompts
         self.max_new_tokens = max_new_tokens
         self.engine = RolloutEngine(cfg, rl, max_new_tokens)
-        self.trainer = Trainer(cfg, rl, algo)
+        self.resilience = resilience
+        guard = resilience.guard if resilience is not None else None
+        self.trainer = Trainer(
+            cfg, rl, algo,
+            skip_nonfinite=(guard is not None and guard.policy != "off"))
         self.algo = self.trainer.algo
+        self.guard = guard
         self.queue = RolloutQueue(queue_capacity, rl.max_staleness)
         self.seed = seed
         self._stop = threading.Event()
@@ -112,6 +152,12 @@ class AsyncOrchestrator:
         self.decode_horizon = decode_horizon
         self._serve_kwargs = serve_kwargs or {}
         self.control_plane = None
+        self.worker = None  # the SupervisedWorker of the last run()
+
+    @property
+    def _faults(self):
+        return self.resilience.faults if self.resilience is not None \
+            else None
 
     def _build_control_plane(self, store: WeightStore):
         from repro.rollout.continuous import ContinuousBatchingEngine
@@ -125,7 +171,7 @@ class AsyncOrchestrator:
         return ServingControlPlane(
             srv, store,
             AdmissionScheduler(SchedulerConfig(d_max=self.rl.max_staleness)),
-            rollout_queue=self.queue)
+            rollout_queue=self.queue, faults=self._faults)
 
     def _rollout_once_cp(self, key):
         """Group rollout through the serving control plane: GRPO members
@@ -142,9 +188,21 @@ class AsyncOrchestrator:
         rewards = self.task.rewards(completions, answers)
         return rb, rewards
 
-    def _rollout_worker(self, store: WeightStore):
+    def _rollout_worker(self, ctx, store: WeightStore):
+        """Supervised worker body: loops until told to stop, heartbeats
+        every iteration, raises on injected crashes (the supervisor
+        captures + restarts)."""
+        from repro.async_rl.buffer import QueueClosed
+
+        faults = self._faults
         key = jax.random.PRNGKey(self.seed + 1)
-        while not self._stop.is_set():
+        while not ctx.should_stop():
+            ctx.heartbeat()
+            if faults is not None:
+                faults.maybe_crash("rollout_crash")
+                stall = faults.check("queue_stall")
+                if stall is not None and stall.magnitude > 0:
+                    time.sleep(stall.magnitude)
             key, sub = jax.random.split(key)
             t0 = time.perf_counter()
             if self.control_plane is not None:
@@ -161,39 +219,101 @@ class AsyncOrchestrator:
                     flow_end("publish", version)
             self._rollout_times.append(time.perf_counter() - t0)
             rb.rewards = rewards  # piggyback
-            if not self.queue.push(rb, timeout=1.0):
-                continue  # queue full — back-pressure
+            try:
+                if not self.queue.push(rb, timeout=1.0):
+                    continue  # queue full — back-pressure
+            except QueueClosed:
+                return  # consumer went away: clean exit
+
+    def _pop_batches(self, state: TrainState):
+        """One fresh batch, deadlock-free when supervised."""
+        if self.resilience is not None:
+            from repro.resilience.supervisor import pop_with_health
+            return pop_with_health(
+                self.queue, self.worker, int(state.version), n=1,
+                deadline_s=self.resilience.pop_deadline_s)
+        return self.queue.pop_fresh(int(state.version), n=1)
+
+    def _checkpoint(self, step_done: int, state: TrainState) -> None:
+        res = self.resilience
+        if res is not None and res.maybe_checkpoint(step_done):
+            res.checkpointer.save(
+                step_done + 1, state,
+                task_rng_state=self.task.rng.bit_generator.state,
+                extra={"algo": self.algo.name, "mode": "async"})
+
+    def _apply_guard(self, state: TrainState, m: Dict[str, float]
+                     ) -> TrainState:
+        """Host-side guard policy on the step's (already transferred)
+        metrics. On rollback the restored params/opt replace the live
+        state but the version counter keeps advancing — staleness stamps
+        stay monotonic for the scheduler."""
+        if self.guard is None:
+            return state
+        verdict = self.guard.after_step(m)
+        if verdict.action == "rollback" and self.resilience is not None \
+                and self.resilience.checkpointer is not None:
+            info = self.resilience.checkpointer.restore_latest()
+            if info is not None:
+                state = TrainState(info.state.params, info.state.opt,
+                                   state.version)
+        return state
 
     def run(self, state: TrainState, num_steps: int,
-            run_logger=None) -> (TrainState, List[StepRecord]):
-        """Drive ``num_steps`` training steps against the live rollout
-        worker. ``run_logger`` (``obs.runlog.RunLogger``) gets exactly one
-        JSONL step record per training step."""
+            run_logger=None, start_step: int = 0
+            ) -> (TrainState, List[StepRecord]):
+        """Drive training steps ``start_step..num_steps-1`` against the
+        live rollout worker. ``run_logger`` (``obs.runlog.RunLogger``)
+        gets exactly one JSONL step record per training step."""
+        from repro.resilience.supervisor import SupervisedWorker
+
+        res = self.resilience
+        self._stop.clear()
         store = WeightStore(state.params, int(state.version))
+        publisher = None
+        if res is not None:
+            from repro.resilience.publish import ResilientPublisher
+            publisher = ResilientPublisher(
+                store, faults=res.faults,
+                max_retries=res.publish_max_retries, seed=res.seed)
         if self.use_control_plane:
             self.control_plane = self._build_control_plane(store)
-        worker = threading.Thread(target=self._rollout_worker,
-                                  args=(store,), daemon=True,
-                                  name="rollout-worker")
+        self.worker = SupervisedWorker(
+            "rollout-worker", self._rollout_worker, args=(store,),
+            max_restarts=(res.max_worker_restarts if res is not None
+                          else 0),
+            heartbeat_timeout_s=(res.heartbeat_timeout_s if res is not None
+                                 else 60.0),
+            seed=(res.seed if res is not None else 0),
+            stop_event=self._stop)
         t_start = time.perf_counter()
-        worker.start()
+        self.worker.start()
         records: List[StepRecord] = []
+        faults = self._faults
         try:
-            for step in range(num_steps):
+            for step in range(start_step, num_steps):
+                if faults is not None:
+                    faults.maybe_crash("train_crash")
                 with step_annotation(step):
-                    batches = self.queue.pop_fresh(int(state.version), n=1)
+                    batches = self._pop_batches(state)
                     rewards = np.concatenate([b.rewards for b in batches])
+                    rewards = _inject_nan_reward(rewards, faults)
                     tb = assemble_train_batch(batches, rewards)
                     t0 = time.perf_counter()
                     with span("train_step", step=step):
                         state, m = self.trainer.step(state, tb)
                     train_t = time.perf_counter() - t0
+                    state = self._apply_guard(state, m)
                     version = int(state.version)
                     with span("weight_publish", version=version):
-                        store.publish(state.params, version)
+                        if publisher is not None:
+                            publisher.publish(state.params, version)
+                        else:
+                            store.publish(state.params, version)
                         # open the publish->resume flow arrow (closed by
                         # the first rollout/serving step under `version`)
                         flow_start("publish", version)
+                self._checkpoint(step, state)
                 serving = (self.control_plane.metrics.snapshot()
                            if self.control_plane is not None else None)
                 records.append(StepRecord(
@@ -208,12 +328,14 @@ class AsyncOrchestrator:
                     wall_time_s=time.perf_counter() - t_start,
                     serving=serving,
                     train_tokens=m.get("tokens", 0.0),
-                    host_syncs=m.get("host_syncs", 0.0)))
+                    host_syncs=m.get("host_syncs", 0.0),
+                    resilience=_resilience_snapshot(res)))
                 if run_logger is not None:
                     run_logger.log_step(records[-1])
         finally:
             self._stop.set()
-            worker.join(timeout=10.0)
+            self.queue.close()
+            self.worker.stop(timeout=10.0)
         return state, records
 
 
@@ -227,22 +349,53 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
                    eval_fn: Optional[Callable] = None,
                    num_microbatches: int = 1,
                    run_logger=None,
+                   resilience=None,
+                   resume=None,
                    ) -> (TrainState, List[StepRecord]):
     """Deterministic async simulation: behavior policy lags ``staleness``
     versions behind (0 == synchronous on-policy). ``algo`` is an
     ``Algorithm`` or registry name. ``eval_fn(params)`` is invoked every
     ``eval_every`` steps (the paper's held-out eval worker, Fig. 3);
     results land in ``StepRecord.eval_reward``. ``run_logger``
-    (``obs.runlog.RunLogger``) gets one JSONL step record per step."""
+    (``obs.runlog.RunLogger``) gets one JSONL step record per step.
+
+    ``resilience`` (``repro.resilience.ResilienceConfig``) enables
+    periodic checkpoints, guard policies, and fault injection;
+    ``resume`` (``repro.resilience.ResumeInfo``, e.g. from
+    ``CheckpointManager.restore_latest()``) continues a checkpointed run
+    — params, Adam state, weight version, rollout PRNG key, staleness
+    history, and the task's RNG stream are all restored, so the resumed
+    run is bit-identical to the uninterrupted one from that step.
+    """
+    guard = resilience.guard if resilience is not None else None
+    faults = resilience.faults if resilience is not None else None
     engine = RolloutEngine(cfg, rl, max_new_tokens)
-    trainer = Trainer(cfg, rl, algo, num_microbatches=num_microbatches)
-    key = jax.random.PRNGKey(seed)
-    state = init_state or trainer.init_state(jax.random.PRNGKey(seed + 7))
+    trainer = Trainer(
+        cfg, rl, algo, num_microbatches=num_microbatches,
+        skip_nonfinite=(guard is not None and guard.policy != "off"))
+    start_step = 0
     history: deque = deque(maxlen=staleness + 1)
-    history.append((state.params, int(state.version)))
+    if resume is not None:
+        state = resume.state
+        start_step = resume.step
+        key = resume.key if resume.key is not None \
+            else jax.random.PRNGKey(seed)
+        if resume.history is not None:
+            for p, v in resume.history:
+                history.append((p, v))
+        else:
+            history.append((state.params, int(state.version)))
+        if resume.task_rng_state is not None:
+            task.rng.bit_generator.state = resume.task_rng_state
+    else:
+        key = jax.random.PRNGKey(seed)
+        state = init_state or trainer.init_state(jax.random.PRNGKey(seed + 7))
+        history.append((state.params, int(state.version)))
     records: List[StepRecord] = []
     t_start = time.perf_counter()
-    for step in range(num_steps):
+    for step in range(start_step, num_steps):
+        if faults is not None:
+            faults.maybe_crash("train_crash")
         behav_params, behav_version = history[0]
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()
@@ -255,16 +408,32 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
             # behavior policy first acts `staleness` steps after publish
             flow_end("publish", behav_version)
         rollout_t = time.perf_counter() - t0
+        rewards = _inject_nan_reward(rewards, faults)
         tb = assemble_train_batch([rb], rewards)
         t0 = time.perf_counter()
         with step_annotation(step), span("train_step", step=step,
                                          staleness=staleness):
             state, m = trainer.step(state, tb)
         train_t = time.perf_counter() - t0
+        if guard is not None:
+            verdict = guard.after_step(m)
+            if verdict.action == "rollback" and resilience is not None \
+                    and resilience.checkpointer is not None:
+                info = resilience.checkpointer.restore_latest()
+                if info is not None:
+                    state = TrainState(info.state.params, info.state.opt,
+                                       state.version)
+                    history.clear()
         version = int(state.version)
         with span("weight_publish", version=version):
             history.append((state.params, version))
             flow_start("publish", version)
+        if resilience is not None and resilience.maybe_checkpoint(step):
+            resilience.checkpointer.save(
+                step + 1, state, key=key, history=list(history),
+                task_rng_state=task.rng.bit_generator.state,
+                extra={"algo": trainer.algo.name, "mode": "sim",
+                       "staleness": staleness})
         rec = StepRecord(
             step=step, reward=m["reward_mean"], loss=m["loss"],
             entropy=m.get("entropy", 0.0), iw_max=m["iw_max"],
@@ -273,7 +442,8 @@ def simulate_async(cfg: ModelConfig, rl: RLConfig, task: ArithmeticTask,
             rollout_time_s=rollout_t, train_time_s=train_t,
             wall_time_s=time.perf_counter() - t_start,
             train_tokens=m.get("tokens", 0.0),
-            host_syncs=m.get("host_syncs", 0.0))
+            host_syncs=m.get("host_syncs", 0.0),
+            resilience=_resilience_snapshot(resilience))
         if eval_fn and eval_every and (step + 1) % eval_every == 0:
             rec.eval_reward = float(eval_fn(state.params))
         records.append(rec)

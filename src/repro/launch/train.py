@@ -211,6 +211,36 @@ def main() -> None:
     p.add_argument("--metrics-prom", default=None, metavar="FILE",
                    help="dump the metrics registry (serving + training) "
                         "in prometheus text format at exit")
+    # fault tolerance (repro.resilience)
+    p.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                   help="crash-consistent step-named checkpoints go here "
+                        "(atomic npz+json pairs with checksum + a 'latest' "
+                        "pointer)")
+    p.add_argument("--ckpt-every", type=int, default=0, metavar="N",
+                   help="commit a checkpoint every N completed steps "
+                        "(requires --ckpt-dir)")
+    p.add_argument("--resume", default=None, metavar="auto|STEP",
+                   help="'auto': resume from the newest valid checkpoint "
+                        "in --ckpt-dir (fresh start when none); an "
+                        "integer: resume from exactly that step's "
+                        "checkpoint. Sim-engine resume is bit-identical "
+                        "to the uninterrupted run.")
+    p.add_argument("--fault", action="append", default=[],
+                   metavar="KIND@AT[xN][:MAG]",
+                   help="inject a deterministic fault (repeatable), e.g. "
+                        "rollout_crash@1, train_crash@3, publish_fail@0x2, "
+                        "queue_stall@2:0.5, nan_grad@4, kv_exhaust@5x3:64, "
+                        "nan_logits@2")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="seed for the fault plane's RNG (which row/reward "
+                        "gets poisoned, backoff jitter)")
+    p.add_argument("--guard", default="off",
+                   choices=["off", "skip", "rollback"],
+                   help="non-finite update policy: 'skip' keeps the "
+                        "previous params/opt for poisoned minibatches "
+                        "(on-device, no extra host sync); 'rollback' also "
+                        "restores the last checkpoint when a step goes "
+                        "non-finite or diverges")
     args = p.parse_args()
 
     if args.algo == "list":
@@ -265,22 +295,62 @@ def main() -> None:
 
     task = ArithmeticTask(max_operand=9, n_terms=2, prompt_len=8)
 
+    # --- fault tolerance: checkpoints, guards, fault plane, resume -------
+    resilience = None
+    resume = None
+    if args.ckpt_dir or args.fault or args.guard != "off":
+        from repro.resilience import (CheckpointManager, FaultPlan,
+                                      ResilienceConfig, TrainGuard)
+        resilience = ResilienceConfig(
+            faults=(FaultPlan.from_strings(args.fault, seed=args.fault_seed)
+                    if args.fault else None),
+            guard=(TrainGuard(policy=args.guard) if args.guard != "off"
+                   else None),
+            checkpointer=(CheckpointManager(args.ckpt_dir)
+                          if args.ckpt_dir else None),
+            ckpt_every=args.ckpt_every, seed=args.fault_seed)
+    if args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("--resume requires --ckpt-dir")
+        ckpt = resilience.checkpointer
+        if args.resume == "auto":
+            resume = ckpt.restore_latest()
+        else:
+            resume = ckpt.restore(ckpt.path_for(int(args.resume)))
+        if resume is not None:
+            log.print(f"resuming at step {resume.step} "
+                      f"(version {int(resume.state.version)}) from "
+                      f"{resume.path}")
+            log.log_event("resume", step=resume.step, path=resume.path)
+        else:
+            log.print(f"--resume auto: no valid checkpoint in "
+                      f"{args.ckpt_dir}; starting fresh")
+
     with mesh, use_sharding(env):
         if args.engine == "async":
             from repro.async_rl.orchestrator import AsyncOrchestrator
             from repro.training.trainer import Trainer
             orch = AsyncOrchestrator(
                 cfg, rl, task, algo, n_prompts=8, max_new_tokens=6,
-                use_control_plane=True)
-            state = Trainer(cfg, rl, algo).init_state(
-                jax.random.PRNGKey(7))
-            state, recs = orch.run(state, args.steps, run_logger=log)
+                use_control_plane=True, resilience=resilience)
+            start_step = 0
+            if resume is not None:
+                state = resume.state
+                start_step = resume.step
+                if resume.task_rng_state is not None:
+                    task.rng.bit_generator.state = resume.task_rng_state
+            else:
+                state = Trainer(cfg, rl, algo).init_state(
+                    jax.random.PRNGKey(7))
+            state, recs = orch.run(state, args.steps, run_logger=log,
+                                   start_step=start_step)
         else:
             state, recs = simulate_async(
                 cfg, rl, task, algo, args.steps, n_prompts=8,
                 max_new_tokens=6,
                 staleness=0 if algo.on_policy else args.staleness,
-                num_microbatches=args.microbatch, run_logger=log)
+                num_microbatches=args.microbatch, run_logger=log,
+                resilience=resilience, resume=resume)
     for r in recs[:: max(1, len(recs) // 8)]:
         log.print(
             f"  step {r.step:3d} reward {r.reward:.3f} loss {r.loss:+.4f} "

@@ -46,6 +46,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--prefill-chunk", type=int, default=16)
     p.add_argument("--d-max", type=int, default=1_000_000)
     p.add_argument("--age-promote-s", type=float, default=math.inf)
+    p.add_argument("--fault", action="append", default=[],
+                   metavar="KIND@AT[xN][:MAG]",
+                   help="inject a deterministic serving fault "
+                        "(repeatable): kv_exhaust@STEPxN:BLOCKS holds KV "
+                        "blocks hostage, nan_logits@STEP poisons a decode "
+                        "logits row")
+    p.add_argument("--fault-seed", type=int, default=0)
     p.add_argument("--quick", action="store_true",
                    help="CI smoke: short trace")
     p.add_argument("--quiet", action="store_true")
@@ -93,12 +100,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                      f"{len(trace.publishes)} publishes) "
                      f"policy={args.policy} arch={args.arch}")
         t0 = time.perf_counter()
+        faults = None
+        if args.fault:
+            from repro.resilience import FaultPlan
+            faults = FaultPlan.from_strings(args.fault,
+                                            seed=args.fault_seed)
         result = run_trace(
             cfg, params, trace, policy=args.policy, logger=logger,
             seed=args.seed, max_seqs=args.max_seqs,
             decode_horizon=args.horizon,
             prefill_chunk=args.prefill_chunk, d_max=args.d_max,
-            age_promote_s=args.age_promote_s)
+            age_promote_s=args.age_promote_s, faults=faults)
         wall = time.perf_counter() - t0
         logger.print(render_load(result.summary))
         logger.print(

@@ -112,7 +112,8 @@ def build_control_plane(cfg, params, trace: Trace, *, policy: str = "slo",
                         prefill_budget: int = 2, d_max: int = 1_000_000,
                         age_promote_s: float = math.inf,
                         max_preempts: int = 4,
-                        preempt_slack_frac: float = 0.25):
+                        preempt_slack_frac: float = 0.25,
+                        faults=None):
     """Engine + scheduler + control plane for a replay run.
 
     ``policy``: ``"slo"`` = priority classes + SLO shed/preempt;
@@ -143,7 +144,8 @@ def build_control_plane(cfg, params, trace: Trace, *, policy: str = "slo",
     cp = ServingControlPlane(engine, store, scheduler,
                              use_prefix_cache=False,
                              resubmit_dropped=False,
-                             prefill_budget=prefill_budget, clock=clock)
+                             prefill_budget=prefill_budget, clock=clock,
+                             faults=faults)
     return cp, store, clock, cost
 
 

@@ -56,6 +56,12 @@ def summarize(steps: List[Dict[str, Any]],
     out["host_syncs_per_step"] = (
         sum(s.get("host_syncs", 0.0) for s in steps) / n)
 
+    # resilience counters are cumulative — the last step's snapshot is the
+    # run total (faults injected, worker restarts, skipped updates, ...)
+    res = last.get("resilience")
+    if res:
+        out["resilience"] = dict(res)
+
     serving = last.get("serving")
     if serving:
         out["serving"] = {
@@ -167,6 +173,28 @@ def render(report: Dict[str, Any]) -> str:
             f"prefill-chunks {srv.get('prefill_chunks') or 0:.0f}  "
             f"interrupts {srv.get('interrupts') or 0:.0f} "
             f"(resumed {srv.get('resumed_sequences') or 0:.0f} seqs)")
+    res = report.get("resilience")
+    if res:
+        def _r(name: str) -> float:
+            # labeled counters (resilience_faults_injected_total{kind=..})
+            # fold into their base name for the one-line summary
+            return sum(v for k, v in res.items()
+                       if k == name or k.startswith(name + "{"))
+        lines.append("  resilience:")
+        lines.append(
+            f"    faults injected "
+            f"{_r('resilience_faults_injected_total'):.0f}  "
+            f"worker crashes {_r('resilience_worker_crashes_total'):.0f} "
+            f"(restarts {_r('resilience_worker_restarts_total'):.0f}, "
+            f"permanent {_r('resilience_worker_failures_total'):.0f})")
+        lines.append(
+            f"    skipped updates "
+            f"{_r('resilience_skipped_updates_total'):.0f}  "
+            f"rollbacks {_r('resilience_rollbacks_total'):.0f}  "
+            f"publish retries "
+            f"{_r('resilience_publish_retries_total'):.0f}  "
+            f"checkpoints {_r('resilience_checkpoint_saves_total'):.0f} "
+            f"(restores {_r('resilience_checkpoint_restores_total'):.0f})")
     phases = report.get("phases")
     if phases:
         lines.append("  phase breakdown (trace):")

@@ -251,6 +251,14 @@ def span(name: str, **attrs):
     return t.span(name, **attrs)
 
 
+def instant(name: str, **attrs) -> None:
+    """Zero-duration marker under the installed tracer (no-op otherwise) —
+    fault injections, worker restarts, checkpoint restores."""
+    t = _TRACER
+    if t is not None:
+        t.instant(name, **attrs)
+
+
 def flow_start(name: str, flow_id: int, **attrs) -> None:
     t = _TRACER
     if t is not None:

@@ -833,6 +833,33 @@ class ContinuousBatchingEngine:
         if self.prefix_cache is not None and self.allocator.n_free < n:
             self.prefix_cache.evict(n - self.allocator.n_free)
 
+    def decode_block_shortfall(self) -> int:
+        """Blocks the next decode launch would need beyond what the pool
+        can supply (free + cache-evictable). Mirrors ``_prepare_decode``'s
+        need computation — unmapped blocks in each decode-ready slot's
+        write range plus a CoW fork for a radix-shared first block — so
+        the control plane can *shed* work before the allocator hard-OOMs
+        mid-fork (which would desync the host mirrors). 0 when safe.
+        """
+        bs = self.state.block_size
+        mb = self.state.max_blocks
+        H = max(self.decode_horizon, 1)
+        need = 0
+        for slot in self.decode_ready_slots():
+            r = self.slots[slot]
+            n = min(H, r.max_new - len(r.generated))
+            if n <= 0:
+                continue
+            first, last = pc.write_range(int(self._lens[slot]), n, bs, mb)
+            need += int(np.sum(self._tables[slot, first: last + 1] < 0))
+            blk = int(self._tables[slot, first])
+            if blk >= 0 and self.allocator.refs(blk) > 1:
+                need += 1
+        supply = self.allocator.n_free
+        if self.prefix_cache is not None:
+            supply += self.prefix_cache.evictable_count()
+        return max(need - supply, 0)
+
     def free_slots(self) -> List[int]:
         return [s for s, r in self.slots.items() if r is None]
 

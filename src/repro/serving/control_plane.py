@@ -23,10 +23,12 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.async_rl.buffer import RolloutQueue
 from repro.async_rl.weights import WeightStore
 from repro.data import tokenizer as tok
-from repro.obs.tracing import flow_end, span
+from repro.obs.tracing import flow_end, instant, span
 from repro.rollout.continuous import ContinuousBatchingEngine, Request
 from repro.rollout.engine import RolloutBatch
 from repro.serving.interrupts import InterruptController
@@ -43,9 +45,14 @@ class ServingControlPlane:
                  use_prefix_cache: bool = True,
                  resubmit_dropped: bool = True,
                  prefill_budget: int = 2,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 faults=None):
         self.engine = engine
         self.store = store
+        # seeded fault plane (repro.resilience.FaultPlan): kv_exhaust
+        # holds free KV blocks hostage, nan_logits poisons a decode row
+        self.faults = faults
+        self._kv_holds: List[int] = []
         # request-lifecycle clock: wall time by default; the loadgen
         # replay harness injects a virtual clock so submit/admit/TTFT/done
         # stamps (and hence SLO decisions) are trace-deterministic.
@@ -112,6 +119,8 @@ class ServingControlPlane:
             self.metrics.interrupts += 1
             self.metrics.resumed_sequences += inflight
             sp.set(resumed_under_version=version, resumed=inflight)
+        if self.faults is not None:
+            self._fault_hooks()
 
         # preemption of in-flight work: staleness budget (base scheduler)
         # and SLO-overload eviction (loadgen.slo scheduler), with the
@@ -189,6 +198,12 @@ class ServingControlPlane:
             self.metrics.prefill_chunks += launched
         self.metrics.prefill_compiles = self.engine.prefill_compiles
 
+        # graceful degradation under KV-pool pressure: preflight the next
+        # decode launch's block need and shed work through the scheduler
+        # (requeue/drop policy included) instead of letting the allocator
+        # hard-OOM mid-CoW-fork, which would desync the host mirrors.
+        self._shed_for_blocks(version, now)
+
         finished: List[Request] = []
         if self.engine.decode_ready_slots():
             # one decode launch: a fused horizon (decode_horizon tokens per
@@ -215,6 +230,11 @@ class ServingControlPlane:
             self.metrics.page_utilization.observe(
                 1.0 - alloc.n_free / max(alloc.n_blocks, 1))
             self.metrics.cow_forks = alloc.forks
+        # sequences that finished with non-finite logprobs (poisoned
+        # logits / numerical blowup) are never emitted into rollout data —
+        # they are discarded and resubmitted fresh under the live version
+        if finished:
+            finished = self._filter_nonfinite(finished, version, now)
         # time-to-first-token: stamp requests whose first sampled token
         # landed in this step's decode (finished ones already left their
         # slots, so scan both)
@@ -241,6 +261,73 @@ class ServingControlPlane:
             self.metrics.observe_finished(
                 staleness_values=[version - v for v in req.token_versions])
         return finished
+
+    # ----------------------------------------------------------- resilience
+    def _fault_hooks(self) -> None:
+        """Per-step fault-plane sites (seeded chaos testing).
+
+        ``kv_exhaust`` holds ``magnitude`` free KV blocks hostage while
+        the spec fires (consecutive serving steps) and releases them when
+        it stops — the shed path below must absorb the squeeze.
+        ``nan_logits`` poisons one slot's row of the decode logits buffer;
+        the non-finite filter must keep it out of the rollout data.
+        """
+        alloc = self.engine.allocator
+        spec = self.faults.check("kv_exhaust")
+        if spec is not None:
+            want = max(int(spec.magnitude), 1)
+            grab = min(want - len(self._kv_holds), alloc.n_free)
+            if grab > 0:
+                self._kv_holds.extend(alloc.alloc(grab))
+                instant("kv_exhaust_hold", held=len(self._kv_holds))
+        elif self._kv_holds:
+            alloc.release(self._kv_holds)
+            instant("kv_exhaust_release", released=len(self._kv_holds))
+            self._kv_holds = []
+        spec = self.faults.check("nan_logits")
+        if spec is not None:
+            row = int(self.faults.rng.integers(
+                self.engine._next_logits.shape[0]))
+            self.engine._next_logits = \
+                self.engine._next_logits.at[row].set(jnp.nan)
+
+    def _shed_for_blocks(self, version: int, now: float) -> None:
+        """Shed decode-ready work until the next launch fits in the pool.
+
+        Victims are the lowest priority class first (largest numeric
+        priority), least decode progress within a class (cheapest to
+        redo). The scheduler's preemption policy decides requeue vs drop.
+        Never sheds the last sequence — headroom reclaim handles it.
+        """
+        shortfall = self.engine.decode_block_shortfall()
+        while shortfall > 0:
+            ready = self.engine.decode_ready_slots()
+            if len(ready) <= 1:
+                break
+            victim = max(ready, key=lambda s: (
+                self.engine.slots[s].priority,
+                -len(self.engine.slots[s].generated)))
+            req = self.engine.release_slot(victim)
+            self.metrics.oom_sheds += 1
+            instant("oom_shed", rid=req.rid, shortfall=shortfall)
+            self.scheduler.handle_preempted(req, version, now)
+            shortfall = self.engine.decode_block_shortfall()
+
+    def _filter_nonfinite(self, finished: List[Request], version: int,
+                          now: float) -> List[Request]:
+        clean: List[Request] = []
+        for req in finished:
+            if np.isfinite(np.asarray(req.gen_logp, np.float64)).all():
+                clean.append(req)
+                continue
+            self.metrics.nan_drops += 1
+            instant("nan_drop", rid=req.rid)
+            req.reset_generation()
+            req.preempt_count = 0
+            req.drop_reason = ""
+            req.submit_version = version
+            self.scheduler.enqueue(req, now)
+        return clean
 
     # ------------------------------------------------------------ batch api
     def generate_batch(self, prompts: np.ndarray,

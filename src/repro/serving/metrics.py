@@ -53,6 +53,7 @@ _SCALAR_FIELDS = (
     "preemptions", "preemptions_staleness", "preemptions_slo",
     "drops", "drops_staleness_budget", "drops_max_preempts",
     "drops_slo_shed", "admitted", "completed", "cow_forks",
+    "oom_sheds", "nan_drops",
 )
 _DERIVED_FIELDS = ("prefix_hit_rate", "host_syncs_per_token",
                    "decode_tokens_per_s", "prefill_tokens_per_s")
@@ -104,6 +105,11 @@ class ServingMetrics:
     admitted: int = 0
     completed: int = 0
     cow_forks: int = 0
+    # resilience: sequences shed to keep the paged KV pool from hard-OOM
+    # (preflight shortfall detection), and finished sequences discarded
+    # for non-finite logprobs (NaN logits fault / numerical blowup)
+    oom_sheds: int = 0
+    nan_drops: int = 0
     register: dataclasses.InitVar[bool] = True
 
     def __post_init__(self, register: bool = True) -> None:
@@ -190,5 +196,7 @@ class ServingMetrics:
             admitted=float(self.admitted),
             completed=float(self.completed),
             cow_forks=float(self.cow_forks),
+            oom_sheds=float(self.oom_sheds),
+            nan_drops=float(self.nan_drops),
         )
         return out

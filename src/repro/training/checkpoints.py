@@ -1,12 +1,34 @@
-"""Dependency-free pytree checkpointing (npz + json metadata)."""
+"""Dependency-free pytree checkpointing (npz + json metadata).
+
+Crash consistency: a checkpoint is the *pair* (``<name>.npz``,
+``<name>.json``) committed atomically. ``save_checkpoint`` stages both
+files in a temp dir next to the target, fsyncs them, then ``os.replace``s
+the npz first and the json second (and fsyncs the directory). The json
+carries a CRC32 of the npz bytes, so it doubles as the commit record: a
+crash between the two replaces leaves a checksum mismatch that
+``load_checkpoint`` turns into ``CheckpointError`` instead of silently
+restoring torn state. ``resilience.checkpoint.CheckpointManager`` builds
+step-named checkpoints + a ``latest`` pointer on top of this primitive.
+"""
 from __future__ import annotations
 
 import json
 import os
+import tempfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+# metadata keys owned by the checkpoint format itself
+_CHECKSUM_KEY = "__npz_crc32__"
+_FORMAT_KEY = "__format__"
+_FORMAT_VERSION = 1
+
+
+class CheckpointError(RuntimeError):
+    """Missing, torn, or corrupt checkpoint."""
 
 
 def _flatten(tree, path="") -> Dict[str, np.ndarray]:
@@ -41,25 +63,118 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
     return fix(root)
 
 
+def _paths(path: str) -> Tuple[str, str]:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".npz", base + ".json"
+
+
+def _file_crc32(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return  # platform without directory fds
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(path: str, tree: Any,
                     metadata: Optional[Dict[str, Any]] = None) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    """Atomically write ``tree`` (npz) + ``metadata`` (json) as one unit.
+
+    Both files are staged in a temp dir on the same filesystem, fsynced,
+    then published with ``os.replace`` — npz before json, so the json
+    (which embeds the npz checksum) commits the pair. Any crash leaves
+    either the previous complete checkpoint or a detectable mismatch,
+    never a silently torn one.
+    """
+    directory = os.path.dirname(path) or "."
+    os.makedirs(directory, exist_ok=True)
+    npz_path, meta_path = _paths(path)
     flat = _flatten(jax.device_get(tree))
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
-    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
-    with open(meta_path, "w") as f:
-        json.dump(metadata or {}, f, indent=2)
+    tmpdir = tempfile.mkdtemp(dir=directory, prefix=".ckpt-tmp-")
+    try:
+        tmp_npz = os.path.join(tmpdir, "tree.npz")
+        tmp_meta = os.path.join(tmpdir, "meta.json")
+        with open(tmp_npz, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        meta = dict(metadata or {})
+        meta[_CHECKSUM_KEY] = _file_crc32(tmp_npz)
+        meta[_FORMAT_KEY] = _FORMAT_VERSION
+        with open(tmp_meta, "w") as f:
+            json.dump(meta, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_npz, npz_path)
+        os.replace(tmp_meta, meta_path)
+        _fsync_dir(directory)
+    finally:
+        # only staging leftovers remain on failure; the publish itself
+        # moved the files out
+        for name in ("tree.npz", "meta.json"):
+            p = os.path.join(tmpdir, name)
+            if os.path.exists(p):
+                os.unlink(p)
+        os.rmdir(tmpdir)
 
 
-def load_checkpoint(path: str) -> Tuple[Any, Dict[str, Any]]:
-    npz = path if path.endswith(".npz") else path + ".npz"
-    with np.load(npz) as data:
-        flat = {k: data[k] for k in data.files}
-    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
-    meta = {}
+def load_checkpoint(path: str, verify: bool = True
+                    ) -> Tuple[Any, Dict[str, Any]]:
+    """Load (tree, metadata); with ``verify`` (default) recompute the npz
+    checksum against the committed one and raise ``CheckpointError`` on a
+    torn/corrupt pair."""
+    npz_path, meta_path = _paths(path)
+    if not os.path.exists(npz_path):
+        raise CheckpointError(f"checkpoint not found: {npz_path}")
+    meta: Dict[str, Any] = {}
     if os.path.exists(meta_path):
-        with open(meta_path) as f:
-            meta = json.load(f)
+        try:
+            with open(meta_path) as f:
+                meta = json.load(f)
+        except ValueError as e:
+            raise CheckpointError(
+                f"corrupt checkpoint metadata {meta_path}: {e}") from e
+    elif verify:
+        # the json is the commit record of the pair — a lone npz is a
+        # crash between the two os.replace publishes, never a valid state
+        raise CheckpointError(
+            f"checkpoint {npz_path} has no committed metadata "
+            f"({meta_path} missing): torn write?")
+    if verify and _CHECKSUM_KEY in meta:
+        crc = _file_crc32(npz_path)
+        if crc != int(meta[_CHECKSUM_KEY]):
+            raise CheckpointError(
+                f"checkpoint checksum mismatch for {npz_path}: npz crc32 "
+                f"{crc:#010x} != committed {int(meta[_CHECKSUM_KEY]):#010x}"
+                " (torn write?)")
+    try:
+        with np.load(npz_path) as data:
+            flat = {k: data[k] for k in data.files}
+    except Exception as e:  # zipfile/np errors on truncated files
+        raise CheckpointError(f"unreadable checkpoint {npz_path}: {e}") from e
+    meta = {k: v for k, v in meta.items()
+            if k not in (_CHECKSUM_KEY, _FORMAT_KEY)}
     return _unflatten(flat), meta
 
 

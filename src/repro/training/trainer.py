@@ -156,8 +156,8 @@ def recompute_prox_logp(params, cfg: ModelConfig, tokens: jax.Array
 # array is the step's one device->host transfer.
 METRIC_KEYS: Tuple[str, ...] = (
     "clipped_frac", "clipped_tokens", "entropy", "grad_norm", "iw_max",
-    "iw_mean", "iw_min", "kl", "loss", "ratio_mean", "reward_mean",
-    "staleness_mean", "tokens",
+    "iw_mean", "iw_min", "kl", "loss", "nonfinite", "ratio_mean",
+    "reward_mean", "staleness_mean", "tokens",
 )
 
 
@@ -171,6 +171,9 @@ def _reduce_metrics(stacked: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         out["iw_min"] = jnp.min(stacked["iw_min"], axis=0)
     if "clipped_tokens" in stacked:
         out["clipped_tokens"] = jnp.sum(stacked["clipped_tokens"], axis=0)
+    if "nonfinite" in stacked:
+        # minibatches whose update was non-finite: a count, not a mean
+        out["nonfinite"] = jnp.sum(stacked["nonfinite"], axis=0)
     return out
 
 
@@ -182,7 +185,7 @@ def _constrain_batch(t: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
 def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
                      versions, rewards, prox_logp=None, *, cfg: ModelConfig,
                      rl: RLConfig, algo: Algorithm, num_minibatches: int,
-                     num_microbatches: int):
+                     num_microbatches: int, skip_nonfinite: bool = False):
     """One full training step, compiled: advantages -> scan over minibatch
     updates (optionally gradient-accumulated over microbatches) -> packed
     metrics. Exactly one output array carries every scalar metric. The
@@ -268,8 +271,23 @@ def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
     def minibatch_body(carry, t):
         p, o = carry
         (loss, metrics), grads = grads_of(p, t)
-        p, o, gnorm = adam_update(grads, o, p, rl)
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        p2, o2, gnorm = adam_update(grads, o, p, rl)
+        # on-device non-finite guard: grad_norm is a global reduction, so
+        # any NaN/Inf gradient leaf poisons it — one scalar flag covers
+        # loss + every gradient, and it rides the packed metric array
+        # (zero extra host syncs).
+        ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        if skip_nonfinite:
+            # poisoned minibatch: keep params AND the whole Adam state
+            # (moments + step count) bit-identical — the update never
+            # happened (resilience.guards skip-step policy)
+            sel = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+            p = jax.tree.map(sel, p2, p)
+            o = jax.tree.map(sel, o2, o)
+        else:
+            p, o = p2, o2
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       nonfinite=(~ok).astype(jnp.float32))
         return (p, o), metrics
 
     (params, opt), stacked = jax.lax.scan(minibatch_body, (params, opt), mbt)
@@ -284,7 +302,8 @@ def _train_step_impl(params, opt, version, tokens, behav_logp, mask,
     return params, opt, packed
 
 
-_STEP_STATICS = ("cfg", "rl", "algo", "num_minibatches", "num_microbatches")
+_STEP_STATICS = ("cfg", "rl", "algo", "num_minibatches", "num_microbatches",
+                 "skip_nonfinite")
 # Default engine donates only the optimizer state: the async runtime keeps
 # older params alive as behavior policies (WeightStore / staleness history),
 # so donating them would invalidate live behavior-policy buffers.
@@ -313,7 +332,8 @@ class Trainer:
 
     def __init__(self, cfg: ModelConfig, rl: Optional[RLConfig] = None,
                  algo=None, *, method: Optional[str] = None,
-                 num_microbatches: int = 1, donate_params: bool = False):
+                 num_microbatches: int = 1, donate_params: bool = False,
+                 skip_nonfinite: bool = False):
         if method is not None:
             warnings.warn(
                 "Trainer(..., method=...) is deprecated; pass an Algorithm "
@@ -326,6 +346,10 @@ class Trainer:
         self.algo = resolve_algorithm(algo, self.rl)
         self.num_microbatches = num_microbatches
         self.donate_params = donate_params
+        # skip-step guard: non-finite minibatch updates are dropped on
+        # device (params/opt unchanged) instead of poisoning the run; the
+        # packed `nonfinite` metric counts them (resilience.guards)
+        self.skip_nonfinite = skip_nonfinite
         self.last_host_syncs = 0  # host transfers in the most recent step
 
     @property
@@ -388,7 +412,8 @@ class Trainer:
                 batch.behav_logp, batch.response_mask, batch.versions,
                 batch.rewards, prox, cfg=self.cfg, rl=rl, algo=self.algo,
                 num_minibatches=nmb,
-                num_microbatches=self.num_microbatches)
+                num_microbatches=self.num_microbatches,
+                skip_nonfinite=self.skip_nonfinite)
 
             # the single device->host transfer of the step
             values = jax.device_get(packed)
@@ -408,7 +433,7 @@ class Trainer:
     _GAUGE_KEYS = ("loss", "reward_mean", "entropy", "grad_norm",
                    "iw_max", "iw_min", "iw_mean", "kl", "clipped_frac",
                    "ratio_mean", "staleness_mean", "prox_time_s")
-    _COUNTER_KEYS = ("tokens", "clipped_tokens", "host_syncs")
+    _COUNTER_KEYS = ("tokens", "clipped_tokens", "host_syncs", "nonfinite")
 
     def _publish_metrics(self, out: Dict[str, float]) -> None:
         reg = get_registry()

@@ -233,7 +233,7 @@ EXPECTED_SERVING_KEYS = {
     "interrupts", "resumed_sequences", "preemptions",
     "preemptions_staleness", "preemptions_slo", "drops",
     "drops_staleness_budget", "drops_max_preempts", "drops_slo_shed",
-    "admitted", "completed", "cow_forks",
+    "admitted", "completed", "cow_forks", "oom_sheds", "nan_drops",
 }
 
 
